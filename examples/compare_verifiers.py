@@ -1,0 +1,60 @@
+"""Compare all eight verification algorithms on one model pair (Sec. 4 in
+miniature) — same drafts, same sampling, matched settings.
+
+    PYTHONPATH=src python examples/compare_verifiers.py --max-new 32
+"""
+import argparse
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
+from repro.training.data import SyntheticLM
+from repro.training.loop import train
+
+V = 128
+VERIFIERS = [
+    ("naive_single", 1, 0, 4),
+    ("bv", 1, 0, 4),
+    ("nss", 2, 0, 2),
+    ("naivetree", 2, 0, 2),
+    ("spectr", 2, 0, 2),
+    ("specinfer", 2, 0, 2),
+    ("khisti", 2, 0, 2),
+    ("traversal", 2, 0, 2),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--train-steps", type=int, default=60)
+    args = ap.parse_args(argv)
+
+    tc = ModelConfig(name="t", n_layers=3, d_model=128, n_heads=4, n_kv_heads=2,
+                     d_ff=256, vocab=V, dtype="float32")
+    dc = ModelConfig(name="d", n_layers=1, d_model=64, n_heads=2, n_kv_heads=1,
+                     d_ff=128, vocab=V, dtype="float32")
+    lm = SyntheticLM(V, seed=9)
+    tp, _ = train(tc, lm.batches(8, 48, seed=1), steps=args.train_steps, lr=2e-3, log_every=999)
+    dp, _ = train(dc, lm.batches(8, 48, seed=2), steps=args.train_steps, lr=3e-3, log_every=999)
+
+    rng = np.random.default_rng(0)
+    prompt = lm.sample(rng, 10).tolist()
+    print(f"{'verifier':14s} {'(K,L1,L2)':>10s} {'block_eff':>10s} {'target_calls':>13s}")
+    for verifier, K, L1, L2 in VERIFIERS:
+        eng = SpeculativeEngine(
+            tc, tp, dc, dp,
+            EngineConfig(verifier=verifier, K=K, L1=L1, L2=L2, max_cache=512, seed=3),
+            SamplingParams(args.temperature, 1.0),
+        )
+        eng.generate(list(prompt), max_new=args.max_new)
+        c = eng.counters
+        be = c["accepted"] / c["blocks"] + 1
+        print(f"{verifier:14s} {f'({K},{L1},{L2})':>10s} {be:10.3f} {c['target_calls']:13d}")
+
+
+if __name__ == "__main__":
+    main()

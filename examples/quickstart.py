@@ -1,0 +1,38 @@
+"""Quickstart: lossless multi-path speculative decoding in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a tiny target + draft pair, drafts (K, L1, L2)-delayed trees, verifies
+with SpecInfer and with Traversal, and shows the block-efficiency difference.
+"""
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
+
+VOCAB = 128
+target_cfg = ModelConfig(name="target", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                         d_ff=256, vocab=VOCAB, dtype="float32")
+draft_cfg = ModelConfig(name="draft", n_layers=1, d_model=64, n_heads=2, n_kv_heads=2,
+                        d_ff=128, vocab=VOCAB, dtype="float32")
+
+target_params = init_params(target_cfg, jax.random.PRNGKey(0))
+draft_params = init_params(draft_cfg, jax.random.PRNGKey(1))
+
+prompt = [7, 3, 11, 42]
+for verifier in ["specinfer", "traversal"]:
+    engine = SpeculativeEngine(
+        target_cfg, target_params, draft_cfg, draft_params,
+        EngineConfig(verifier=verifier, K=2, L1=2, L2=2, max_cache=256, seed=0),
+        SamplingParams(temperature=0.8, top_p=0.95),
+    )
+    out = engine.generate(prompt, max_new=40)
+    c = engine.counters
+    be = c["accepted"] / c["blocks"] + 1
+    print(f"{verifier:10s} -> {out[:12]}...  block_efficiency={be:.2f} "
+          f"(target calls: {c['target_calls']}, tokens: {len(out)})")
+
+print("\nBoth outputs are exact samples from the target distribution —")
+print("see tests/test_lossless.py for the enumeration proof of every verifier.")

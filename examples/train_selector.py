@@ -1,0 +1,86 @@
+"""Train the neural delay-and-branch selector (NDE, Sec. 6) against a real
+model pair and deploy it in the engine.
+
+    PYTHONPATH=src python examples/train_selector.py --roots 16 --steps 150
+
+Flow: offline trace collection (Eq. 3 block-efficiency labels per action +
+Eq. 11 latency) -> Eq. 12 training -> engine A/B: static vs NDE policy.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.delayed import LatencyModel
+from repro.core.selector import FixedSpace, SelectorConfig
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
+from repro.serving.nde import NeuralSelector
+from repro.training.data import SyntheticLM
+from repro.training.loop import train
+from repro.training.selector_train import best_static_action, collect_traces, train_selector
+
+V = 128
+ACTIONS = [(1, 3, 0), (2, 1, 1), (2, 2, 2), (4, 1, 1)]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roots", type=int, default=12, help="labelled roots (per prompt)")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--eval-tokens", type=int, default=48)
+    args = ap.parse_args(argv)
+
+    tc = ModelConfig(name="t", n_layers=3, d_model=128, n_heads=4, n_kv_heads=2,
+                     d_ff=256, vocab=V, dtype="float32")
+    dc = ModelConfig(name="d", n_layers=1, d_model=64, n_heads=2, n_kv_heads=1,
+                     d_ff=128, vocab=V, dtype="float32")
+    lm = SyntheticLM(V, seed=5)
+    tp, _ = train(tc, lm.batches(8, 48, seed=1), steps=80, lr=2e-3, log_every=80)
+    dp, _ = train(dc, lm.batches(8, 48, seed=2), steps=80, lr=3e-3, log_every=80)
+
+    lat = LatencyModel(1e-4, 1e-8, 1.2e-3, 1e-7)  # ~12:1 target:draft pass time
+    sampling = SamplingParams(0.9, 1.0)
+    eng = SpeculativeEngine(tc, tp, dc, dp,
+                            EngineConfig(verifier="specinfer", K=2, L1=2, L2=2, max_cache=512),
+                            sampling)
+
+    print("[1/3] collecting offline traces (Eq. 3 labels per action)")
+    rng = np.random.default_rng(0)
+    prompts = [lm.sample(rng, 8).tolist() for _ in range(3)]
+    traces = collect_traces(eng, prompts, ACTIONS, lat,
+                            tokens_per_prompt=args.roots, stride=6, s=1)
+    print(f"  {traces['eff'].shape[0]} roots x {len(ACTIONS)} actions labelled")
+
+    print("[2/3] training the selector (Eq. 12)")
+    scfg = SelectorConfig(hidden_p=tc.d_model, hidden_q=dc.d_model, space=FixedSpace(ACTIONS))
+    sel_params, losses = train_selector(traces, scfg, steps=args.steps, batch=16, lam=0.3)
+    print(f"  loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    print("[3/3] A/B: static best action vs NDE policy")
+    b = best_static_action(traces)
+    Kb, L1b, L2b = ACTIONS[b]
+    results = {}
+    for name, selector, ecfg in [
+        ("static", None, EngineConfig(verifier="specinfer", K=Kb, L1=L1b, L2=L2b, max_cache=512)),
+        ("nde", NeuralSelector(sel_params, scfg, lat, sampling),
+         EngineConfig(verifier="specinfer", max_cache=512)),
+    ]:
+        e = SpeculativeEngine(tc, tp, dc, dp, ecfg, sampling, selector=selector)
+        e.rng = np.random.default_rng(1)
+        tot_time = 0.0
+        produced = 0
+        stream = e.new_stream(lm.sample(np.random.default_rng(2), 8).tolist())
+        while produced < args.eval_tokens:
+            K, L1, L2 = e.choose_action(stream)
+            tot_time += lat.action_time(len(stream["committed"]), K, L1, L2)
+            produced += len(e.step(stream))
+        results[name] = produced / tot_time
+        be = e.counters["accepted"] / e.counters["blocks"] + 1
+        print(f"  {name:7s} modelled TPS={results[name]:8.2f}  block_eff={be:.2f}")
+    print(f"\nNDE/static throughput ratio: {results['nde'] / results['static']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Architecture config registry: ``get_config(name)`` / ``get_smoke(name)``.
+
+The ten assigned architectures (each cites its source) plus the paper's own
+Llama-3 70B/8B pair.  Full configs are exercised via the dry-run
+(ShapeDtypeStruct lowering only); smoke variants run on CPU.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHES = {
+    "granite-8b": "granite_8b",
+    "minitron-8b": "minitron_8b",
+    "granite-3-2b": "granite_3_2b",
+    "whisper-medium": "whisper_medium",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen2-72b": "qwen2_72b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "internvl2-26b": "internvl2_26b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "paper-llama70b": "paper_llama70b_8b",
+}
+
+
+def _mod(name: str):
+    if name not in ARCHES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHES)}")
+    return importlib.import_module(f"repro.configs.{ARCHES[name]}")
+
+
+def get_config(name: str):
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _mod(name).smoke()
+
+
+def list_arches() -> list[str]:
+    return [a for a in ARCHES if a != "paper-llama70b"]

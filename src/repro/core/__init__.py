@@ -1,0 +1,12 @@
+"""Core library: the paper's contribution.
+
+- otlp:       OTLP solvers (Def. 3.2, App. B) + acceptance (App. C) +
+              exact output distributions / branching probabilities (App. D)
+- trees:      draft-tree structures, delayed-tree drafting (Def. 5.2)
+- verify:     top-down OT tree traversal; single-path Naive
+- traversal:  bottom-up Traversal Verification (+ BV as its K=1 reduction)
+- delayed:    Eq. 3 block-efficiency estimation, Eq. 11 latency model,
+              Fig. 1 acceptance/divergence analysis
+- selector:   the neural delay-and-branch predictor (Sec. 6, App. E)
+"""
+from repro.core import delayed, otlp, traversal, trees, verify  # noqa: F401

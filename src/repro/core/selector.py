@@ -1,0 +1,247 @@
+"""Neural delay-and-branch predictor (NDE) — Sec. 6 and Appendix E.
+
+A lightweight MLP policy over the delayed-expansion action space
+A = {1..K_max} x {0..L1_max} x {0..L2_max}.  Inputs (App. E):
+
+  * hidden-state blocks:  h_prev^p, h_prev^q (target/draft states at the
+    preceding token) and h_cur^q (draft state at the root token) — each
+    linearly projected to d=128 + LayerNorm,
+  * standardized scalar features: entropies H(p_prev), H(q_prev), H(q_root),
+    KL(p_prev||q_prev), KL(q_prev||p_prev), ||p_prev - q_prev||_1,
+    context length, temperature, nucleus threshold, and draft/target latency
+    estimates at the current context length,
+  * two-hidden-layer MLP (512 -> 32) with GELU + dropout -> |A| logits.
+
+Training (Eq. 4/5/12): maximise the policy-averaged offline throughput
+estimate against a static per-sampling-config baseline action, with a CVaR
+penalty on the worst alpha-fraction of baseline regressions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ActionSpace:
+    K_max: int = 4
+    L1_max: int = 8
+    L2_max: int = 8
+
+    def actions(self) -> list[tuple[int, int, int]]:
+        # (K, L1, L2); drop degenerate duplicates: L1+L2 == 0 drafts nothing,
+        # and K>1 with L2 == 0 is identical to K=1 with the same L1.
+        out = []
+        for K in range(1, self.K_max + 1):
+            for L1 in range(self.L1_max + 1):
+                for L2 in range(self.L2_max + 1):
+                    if L1 + L2 == 0:
+                        continue
+                    if K > 1 and L2 == 0:
+                        continue
+                    out.append((K, L1, L2))
+        return out
+
+    @property
+    def n(self) -> int:
+        return len(self.actions())
+
+
+class FixedSpace:
+    """An explicit action grid (used when offline labels cover a subset)."""
+
+    def __init__(self, actions: list[tuple[int, int, int]]):
+        self._actions = list(actions)
+
+    def actions(self) -> list[tuple[int, int, int]]:
+        return self._actions
+
+    @property
+    def n(self) -> int:
+        return len(self._actions)
+
+
+@dataclass(frozen=True)
+class SelectorConfig:
+    hidden_p: int = 64     # dim of target hidden states fed in
+    hidden_q: int = 64     # dim of draft hidden states fed in
+    d_proj: int = 128
+    mlp_hidden: tuple = (512, 32)
+    n_scalars: int = 11
+    dropout: float = 0.1
+    space: ActionSpace = field(default_factory=ActionSpace)
+
+
+def init_selector(cfg: SelectorConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+
+    def dense(k, din, dout):
+        return {
+            "w": jax.random.normal(k, (din, dout), jnp.float32) / np.sqrt(din),
+            "b": jnp.zeros((dout,), jnp.float32),
+        }
+
+    n_act = cfg.space.n
+    d_in = 3 * cfg.d_proj + cfg.n_scalars
+    return {
+        "proj_hp": dense(ks[0], cfg.hidden_p, cfg.d_proj),
+        "proj_hq": dense(ks[1], cfg.hidden_q, cfg.d_proj),
+        "proj_hc": dense(ks[2], cfg.hidden_q, cfg.d_proj),
+        "mlp0": dense(ks[3], d_in, cfg.mlp_hidden[0]),
+        "mlp1": dense(ks[4], cfg.mlp_hidden[0], cfg.mlp_hidden[1]),
+        "out": dense(ks[5], cfg.mlp_hidden[1], n_act),
+    }
+
+
+def _ln(x):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + 1e-6)
+
+
+def _apply_dense(layer, x):
+    return x @ layer["w"] + layer["b"]
+
+
+def selector_logits(
+    params: dict,
+    h_prev_p: jax.Array,
+    h_prev_q: jax.Array,
+    h_cur_q: jax.Array,
+    scalars: jax.Array,
+    *,
+    dropout_key: jax.Array | None = None,
+    dropout: float = 0.0,
+) -> jax.Array:
+    """Eq. 10.  Inputs may carry a leading batch axis."""
+    z = jnp.concatenate(
+        [
+            _ln(_apply_dense(params["proj_hp"], h_prev_p)),
+            _ln(_apply_dense(params["proj_hq"], h_prev_q)),
+            _ln(_apply_dense(params["proj_hc"], h_cur_q)),
+            scalars,
+        ],
+        axis=-1,
+    )
+    h = jax.nn.gelu(_apply_dense(params["mlp0"], z))
+    if dropout_key is not None and dropout > 0:
+        keep = jax.random.bernoulli(dropout_key, 1.0 - dropout, h.shape)
+        h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    h = jax.nn.gelu(_apply_dense(params["mlp1"], h))
+    return _apply_dense(params["out"], h)
+
+
+def make_scalar_features(
+    p_prev: np.ndarray,
+    q_prev: np.ndarray,
+    q_root: np.ndarray,
+    ctx_len: int,
+    temperature: float,
+    top_p: float,
+    t_q: float,
+    t_p: float,
+) -> np.ndarray:
+    """App. E scalar feature block (11 features, standardized by the caller
+    or absorbed by the first dense layer)."""
+
+    def H(d):
+        d = np.clip(d, 1e-12, None)
+        return float(-(d * np.log(d)).sum())
+
+    def KL(a, b):
+        a = np.clip(a, 1e-12, None)
+        b = np.clip(b, 1e-12, None)
+        return float((a * (np.log(a) - np.log(b))).sum())
+
+    return np.asarray(
+        [
+            H(p_prev),
+            H(q_prev),
+            H(q_root),
+            KL(p_prev, q_prev),
+            KL(q_prev, p_prev),
+            float(np.abs(p_prev - q_prev).sum()),
+            np.log1p(float(ctx_len)),
+            float(temperature),
+            float(top_p),
+            float(t_q) * 1e3,
+            float(t_p) * 1e3,
+        ],
+        dtype=np.float32,
+    )
+
+
+# ------------------------------------------------------------- training ------
+
+
+def selector_loss(
+    params: dict,
+    batch: dict,
+    *,
+    lam: float = 1.0,
+    cvar_alpha: float = 0.25,
+    aux_ce: float = 0.5,
+    ce_temp: float = 0.05,
+    dropout_key: jax.Array | None = None,
+    dropout: float = 0.0,
+) -> jax.Array:
+    """Eq. 12 + optimal-action distillation.
+
+    The primary term is the paper's baseline-relative log-throughput with the
+    CVaR regression penalty.  Its gradient vanishes once the softmax
+    saturates on the globally-best action, which collapses the policy to the
+    static baseline; App. E describes the logits as "the probabilities of
+    each action being optimal", so we add the implied auxiliary
+    cross-entropy against the per-root TPS-softmax target (temperature
+    ``ce_temp`` on the normalised TPS landscape) — this is what makes the
+    per-context selection actually trainable on offline traces.
+
+    batch:
+      h_prev_p (B, Hp), h_prev_q (B, Hq), h_cur_q (B, Hq), scalars (B, S),
+      eff   (B, A): offline block-efficiency estimates E^[tau+1] per action
+      time  (B, A): Eq. 11 wall-clock estimates per action
+      base  (B,)  : index of the static baseline action
+    """
+    logits = selector_logits(
+        params,
+        batch["h_prev_p"],
+        batch["h_prev_q"],
+        batch["h_cur_q"],
+        batch["scalars"],
+        dropout_key=dropout_key,
+        dropout=dropout,
+    )
+    pi = jax.nn.softmax(logits, axis=-1)
+    tps = batch["eff"] / jnp.maximum(batch["time"], 1e-9)  # (B, A)
+    tps_pi = jnp.sum(pi * batch["eff"], axis=-1) / jnp.sum(pi * batch["time"], axis=-1)  # Eq. 4
+    b = batch["base"]
+    eff_b = jnp.take_along_axis(batch["eff"], b[:, None], axis=-1)[:, 0]
+    time_b = jnp.take_along_axis(batch["time"], b[:, None], axis=-1)[:, 0]
+    tps_base = eff_b / time_b
+    ratio = tps_pi / jnp.maximum(tps_base, 1e-9)
+    main = -jnp.log(jnp.maximum(ratio, 1e-9))  # Eq. 5
+    pen = jnp.square(jnp.maximum(1.0 - ratio, 0.0))
+    # CVaR over the worst alpha-fraction of the minibatch penalties
+    B = pen.shape[0]
+    k = max(int(np.ceil(cvar_alpha * B)), 1)
+    topk = jax.lax.top_k(pen, k)[0]
+    loss = jnp.mean(main) + lam * jnp.mean(topk)
+    if aux_ce > 0:
+        tps_n = tps / jnp.max(tps, axis=-1, keepdims=True)
+        target = jax.nn.softmax(tps_n / ce_temp, axis=-1)
+        ce = -jnp.sum(target * jax.nn.log_softmax(logits, axis=-1), axis=-1)
+        loss = loss + aux_ce * jnp.mean(ce)
+    return loss
+
+
+def select_action(
+    params: dict, h_prev_p, h_prev_q, h_cur_q, scalars, space: ActionSpace
+) -> tuple[int, int, int]:
+    """Inference: argmax_a pi(a|c)."""
+    logits = selector_logits(params, h_prev_p, h_prev_q, h_cur_q, scalars)
+    idx = int(jnp.argmax(logits.reshape(-1)))
+    return space.actions()[idx]

@@ -1,0 +1,150 @@
+"""Tree verification.
+
+Top-down OT-based traversal (Sec. 3.2): starting at the root, repeatedly run
+the OTLP solver on (p, q, child tokens); move to the child matching the output
+token, or terminate emitting it as the correction token.
+
+Merged-context semantics: drafted paths are stored unmerged (see trees.py), so
+the traversal tracks the *active set* of nodes sharing the current context.
+The child list is the multiset of child tokens over the active set — exactly
+the multiplicity semantics of Def. 3.1.
+
+Also: single-path Naive and Block Verification (BV, Sun et al. 2024c) with the
+nested single-uniform coupling:
+
+    w_0 = 1,  w_i = min(1, w_{i-1} * p_i(x_i) / q_i(x_i))
+    P(tau >= i) = w_i           (single U; tau = max{i : w_i >= U})
+    correction at tau = i < L:  r_i ∝ (w_i * p_{i+1}(.) - q_{i+1}(.) * w_{i+1}(.))_+
+                              = (w_i * p_{i+1} - q_{i+1})_+   [since w_{i+1}(s)
+                                = min(1, w_i p(s)/q(s))]
+    correction at tau = L:      p_{L+1}
+
+which reduces to naive speculative sampling's accept/residual at L=1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.otlp import OTLP_SOLVERS, _norm, _pos
+from repro.core.trees import DraftTree
+
+
+# ------------------------------------------------------- top-down OT walk ----
+
+
+def verify_topdown(tree: DraftTree, solver: str, rng: np.random.Generator):
+    """Run an OT-based verifier on a drafted tree with target dists attached.
+
+    Returns (accepted_tokens, correction_token): the emitted block is
+    accepted_tokens + [correction_token].
+    """
+    assert tree.p is not None, "attach_target first"
+    solve, _, _ = OTLP_SOLVERS[solver]
+    active = [0]
+    accepted: list[int] = []
+    while True:
+        kids = tree.children_of_set(active)
+        node = active[0]
+        p, q = tree.p[node], tree.q[node]
+        if not kids:
+            return accepted, int(rng.choice(len(p), p=_norm(np.asarray(p))))
+        xs = [int(tree.tokens[c]) for c in kids]
+        y = solve(p, q, xs, rng)
+        matches = [c for c in kids if int(tree.tokens[c]) == y]
+        if not matches:
+            return accepted, int(y)
+        accepted.append(int(y))
+        active = matches
+
+
+def verify_topdown_output_dist(tree: DraftTree, solver: str) -> dict:
+    """Exact distribution over emitted blocks, conditioned on the tree.
+
+    Returns {tuple(block_tokens): probability}.  Used by the enumeration
+    losslessness tests (expectation over trees must equal the target process).
+    """
+    assert tree.p is not None
+    _, output_dist, _ = OTLP_SOLVERS[solver]
+    out: dict = {}
+
+    def rec(active: list[int], prefix: tuple, mass: float):
+        if mass <= 0:
+            return
+        kids = tree.children_of_set(active)
+        node = active[0]
+        p, q = tree.p[node], tree.q[node]
+        if not kids:
+            for t, pt in enumerate(p):
+                if pt > 0:
+                    key = prefix + (t,)
+                    out[key] = out.get(key, 0.0) + mass * float(pt)
+            return
+        xs = [int(tree.tokens[c]) for c in kids]
+        d = output_dist(p, q, xs)
+        xs_set = set(xs)
+        for t, dt in enumerate(d):
+            if dt <= 0:
+                continue
+            if t in xs_set:
+                rec([c for c in kids if int(tree.tokens[c]) == t], prefix + (t,), mass * float(dt))
+            else:
+                key = prefix + (t,)
+                out[key] = out.get(key, 0.0) + mass * float(dt)
+
+    rec([0], (), 1.0)
+    return out
+
+
+# ------------------------------------------------ single-path Naive / BV -----
+
+
+def _single_path(tree: DraftTree) -> list[int]:
+    path = []
+    node = 0
+    while True:
+        kids = tree.children(node)
+        if not kids:
+            return path
+        assert len(kids) == 1, "single-path verifier on a branching tree"
+        node = kids[0]
+        path.append(node)
+
+
+def verify_naive_single(tree: DraftTree, rng: np.random.Generator):
+    """Original speculative sampling on a single-path tree (Sec. 3.1)."""
+    assert tree.p is not None
+    path = _single_path(tree)
+    accepted: list[int] = []
+    node = 0
+    for v in path:
+        t = int(tree.tokens[v])
+        p, q = tree.p[node], tree.q[node]
+        if rng.random() <= min(1.0, p[t] / max(q[t], 1e-300)):
+            accepted.append(t)
+            node = v
+        else:
+            corr = int(rng.choice(len(p), p=_norm(_pos(np.asarray(p) - np.asarray(q)))))
+            return accepted, corr
+    return accepted, int(rng.choice(tree.vocab, p=_norm(np.asarray(tree.p[node]))))
+
+
+def verify_bv(tree: DraftTree, rng: np.random.Generator):
+    """Block Verification on a single-path tree.
+
+    BV is exactly Traversal Verification restricted to a path (the K=1
+    reduction holds by construction): the whole chain is the trunk, the
+    branch stage is empty, and the trunk stage performs the conditional
+    leaf-to-root climb with nested weights.  See traversal.py for the math.
+    """
+    from repro.core.traversal import verify_traversal
+
+    _single_path(tree)  # asserts path structure
+    return verify_traversal(tree, rng)
+
+
+def verify_bv_output_dist(tree: DraftTree) -> dict:
+    """Exact emitted-block distribution of BV conditioned on the tree."""
+    from repro.core.traversal import verify_traversal_output_dist
+
+    _single_path(tree)
+    return verify_traversal_output_dist(tree)

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle GQA head-group broadcasting, padding to TPU tile boundaries, and the
+interpret-mode fallback (this container is CPU-only: interpret=True executes
+the kernel body in Python for correctness validation; on TPU the same call
+compiles to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.tree_attention import tree_attention
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def gqa_tree_attention(q, k, v, mask, *, block_k: int = 512, interpret: bool = True):
+    """Engine-layout tree attention.
+
+    q (B, T, H, D); k, v (B, S, Hkv, D); mask (B, T, S) or (1, T, S) bool.
+    Returns (B, T, H, D).
+    """
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    Tp = int(np.ceil(T / 8) * 8)
+    bk = min(block_k, int(np.ceil(S / 128) * 128))
+    qf = _pad_to(q.transpose(0, 2, 1, 3), 8, axis=2)  # (B, H, Tp, D)
+    qf = qf.reshape(B * H, Tp, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    mb = jnp.broadcast_to(mask, (B, T, S))
+    mb = _pad_to(mb, 8, axis=1)
+    mb = jnp.broadcast_to(mb[:, None], (B, H, Tp, S)).reshape(B * H, Tp, S)
+    # pad S to the block size (padded slots masked out)
+    kf = _pad_to(kf, bk, axis=1)
+    vf = _pad_to(vf, bk, axis=1)
+    mb = _pad_to(mb, bk, axis=2)
+    out = tree_attention(qf, kf, vf, mb, block_k=bk, interpret=interpret)
+    return out.reshape(B, H, Tp, D)[:, :, :T].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "window", "interpret"))
+def gqa_decode_attention(q, k, v, lengths, *, block_k: int = 1024, window: int = 0, interpret: bool = True):
+    """Engine-layout flash-decode.
+
+    q (B, 1, H, D); k, v (B, S, Hkv, D); lengths (B,) int32.
+    Returns (B, 1, H, D).
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bk = min(block_k, int(np.ceil(S / 128) * 128))
+    qf = jnp.broadcast_to(q.transpose(0, 2, 1, 3), (B, H, 8, D)).reshape(B * H, 8, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, D)
+    kf = _pad_to(kf, bk, axis=1)
+    vf = _pad_to(vf, bk, axis=1)
+    lf = jnp.broadcast_to(lengths[:, None], (B, H)).reshape(B * H, 1)
+    out = decode_attention(qf, kf, vf, lf, block_k=bk, window=window, interpret=interpret)
+    return out.reshape(B, H, 8, D)[:, :, :1].transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, k, v, mask):
+    """q (BH, T, D); k, v (BH, S, D); mask (BH, T, S) -> (BH, T, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32)) / (d**0.5)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bts,bsd->btd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, window: int = 0):
+    """q (BH, R, D); k, v (BH, S, D); lengths (BH, 1) -> (BH, R, D)."""
+    S = k.shape[1]
+    slot = jnp.arange(S)[None, None, :]
+    valid = slot < lengths[:, :, None]
+    if window:
+        valid = valid & (slot >= lengths[:, :, None] - window)
+    d = q.shape[-1]
+    s = jnp.einsum("brd,bsd->brs", q.astype(jnp.float32), k.astype(jnp.float32)) / (d**0.5)
+    s = jnp.where(valid, s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("brs,bsd->brd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Masked flash attention for the speculative tree pass — Pallas TPU kernel.
+
+The target pass of multi-path speculative decoding attends T tree tokens
+against (a) a long committed prefix and (b) the speculation block itself with
+an arbitrary ancestor mask.  On GPU this is a gather + custom-mask Flash
+kernel (DeFT-style); the TPU-native formulation here:
+
+  * queries: the whole (padded) tree block lives in VMEM for the entire
+    kernel — T is tiny (<= 128), so the online-softmax state (m, l, acc)
+    stays in VMEM scratch with no HBM round-trips;
+  * keys/values stream HBM -> VMEM in ``block_k`` chunks along the grid's
+    sequential minor axis (TPU grids execute in order, so cross-block
+    accumulation needs no atomics — the GPU split-k reduction disappears);
+  * the boolean mask streams with the same blocking; MXU matmuls are
+    (T, D) x (D, block_k) with D = head_dim = 128 — hardware-aligned.
+
+Layouts: q (BH, T, D);  k, v (BH, S, D);  mask (BH, T, S).  The ops.py
+wrapper folds batch x heads and broadcasts GQA groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (T, D)
+    k = k_ref[0].astype(jnp.float32)  # (Bk, D)
+    v = v_ref[0].astype(jnp.float32)  # (Bk, D)
+    mask = mask_ref[0]  # (T, Bk) bool
+
+    d = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / (d**0.5)  # (T, Bk)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (T, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (T, Bk); rows that are fully masked give exp(NEG_INF - m)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def tree_attention(q, k, v, mask, *, block_k: int = 512, interpret: bool = False):
+    """q (BH, T, D); k, v (BH, S, D); mask (BH, T, S) -> (BH, T, D).
+
+    S must be a multiple of block_k (caller pads; padded slots masked False).
+    T should be a multiple of 8 and D of 128 for TPU tiling.
+    """
+    BH, T, D = q.shape
+    S = k.shape[1]
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    grid = (BH, nk)
+    return pl.pallas_call(
+        _tree_attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, D), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, T, block_k), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, T, D), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -1,0 +1,241 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun.json
+
+This file (and ONLY this file) forces 512 host platform devices — smoke
+tests and benches see the real single CPU device.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_arches
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, input_specs
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    opt_shardings,
+)
+from repro.models.transformer import forward, init_params, make_train_step
+from repro.training.optim import AdamW
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------- HLO collectives ---
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in an HLO dump."""
+    out = {k: 0 for k in ["all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"]}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        cm = _COLL_RE.match(rhs.split("(")[0].strip().split()[-1] if False else "")
+        # find op name: tokens like "bf16[2048,4096]{1,0} all-gather(...)"
+        opm = _COLL_RE.search(rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        # only count if it's the op being applied (not a fused substring)
+        if f" {op}(" not in rhs and not rhs.startswith(op + "("):
+            continue
+        shape_part = rhs[: opm.start()]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shape_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+    return out
+
+
+# ------------------------------------------------------------ lowering fns ---
+
+
+def build_step(cfg, kind: str):
+    if kind == "train":
+        opt = AdamW(lr=1e-4)
+        ts = make_train_step(cfg, opt)
+        return ts, opt
+    if kind == "prefill":
+        def prefill(params, cache, tokens, enc_embeds=None, embeds=None):
+            logits, new_cache, _ = forward(
+                params, cfg, tokens, mode="full", cache=cache,
+                enc_embeds=enc_embeds, embeds=embeds,
+            )
+            return logits[:, -1], new_cache
+        return prefill, None
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache, _ = forward(params, cfg, tokens, mode="decode", cache=cache)
+        return logits, new_cache
+    return serve_step, None
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False, compile_: bool = True,
+              cfg_override=None):
+    """Lower (and compile) one (arch x shape x mesh).  Returns a result dict.
+
+    cfg_override: replace the registered config (the roofline harness lowers
+    unrolled reduced-depth variants through the exact same path)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg0 = cfg_override if cfg_override is not None else get_config(arch)
+    kind, kw, cfg = input_specs(cfg0, shape_name)
+    # fake cache length: decode against a full context
+    step, opt = build_step(cfg, kind)
+
+    params_shapes = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    p_sh = param_shardings(mesh, params_shapes, cfg, mode="serve" if kind == "decode" else "train")
+
+    from repro.models import act_sharding
+    act_axes = ("pod", "data") if multi_pod else ("data",)
+
+    t0 = time.time()
+    if kind == "train":
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        o_sh = opt_shardings(mesh, p_sh, opt_shapes)
+        b_sh = batch_shardings(mesh, kw["batch"])
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh), out_shardings=(p_sh, o_sh, None))
+        with mesh, act_sharding.activation_sharding(mesh, act_axes):
+            lowered = jitted.lower(params_shapes, opt_shapes, kw["batch"])
+    else:
+        c_sh = cache_shardings(mesh, kw["cache"], batch_sharded=SHAPES[shape_name]["batch"] > 1)
+        b = SHAPES[shape_name]["batch"]
+        ax = ("pod", "data") if multi_pod else ("data",)
+        dsize = int(np.prod([mesh.shape[a] for a in ax]))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tok_sh = NamedSharding(mesh, P(ax if len(ax) > 1 else ax[0]) if b % dsize == 0 else P())
+        in_sh = [p_sh, c_sh, tok_sh]
+        args = [params_shapes, kw["cache"], kw["tokens"]]
+        extra_names = []
+        for extra in ("enc_embeds", "embeds"):
+            if extra in kw:
+                in_sh.append(tok_sh)
+                args.append(kw[extra])
+                extra_names.append(extra)
+        jitted = jax.jit(step, in_shardings=tuple(in_sh))
+        with mesh, act_sharding.activation_sharding(mesh, act_axes):
+            lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "lower_s": round(t_lower, 1),
+    }
+    if not compile_:
+        return res
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    res["compile_s"] = round(time.time() - t0, 1)
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    res["flops"] = float(ca.get("flops", 0.0))
+    res["hbm_bytes"] = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        res["argument_bytes"] = int(getattr(ma, "argument_size_in_bytes", 0))
+        res["output_bytes"] = int(getattr(ma, "output_size_in_bytes", 0))
+        res["temp_bytes"] = int(getattr(ma, "temp_size_in_bytes", 0))
+        res["peak_bytes"] = res["argument_bytes"] + res["temp_bytes"]
+    except Exception as e:  # pragma: no cover
+        res["memory_analysis_error"] = str(e)
+    hlo = compiled.as_text()
+    res["collectives"] = collective_bytes(hlo)
+    res["collective_bytes_total"] = int(sum(res["collectives"].values()))
+    return res
+
+
+# ------------------------------------------------------------------- main ----
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    arches = list_arches() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in arches:
+        for shape in shapes:
+            for mp in pods:
+                try:
+                    r = lower_one(arch, shape, multi_pod=mp, compile_=not args.no_compile)
+                    status = "OK"
+                except Exception as e:  # noqa: BLE001
+                    r = {"arch": arch, "shape": shape, "mesh": "2x16x16" if mp else "16x16",
+                         "error": f"{type(e).__name__}: {e}"}
+                    status = "FAIL"
+                results.append(r)
+                flops = r.get("flops")
+                print(
+                    f"[{status}] {arch:26s} {shape:12s} {r['mesh']:8s} "
+                    f"lower={r.get('lower_s','-')}s compile={r.get('compile_s','-')}s "
+                    f"flops={flops:.3e}" if flops else
+                    f"[{status}] {arch:26s} {shape:12s} {r['mesh']:8s} {r.get('error','')[:120]}",
+                    flush=True,
+                )
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    bad = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(bad)}/{len(results)} lowered+compiled OK")
+    if bad:
+        for r in bad:
+            print("FAILED:", r["arch"], r["shape"], r["mesh"], r["error"][:200])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

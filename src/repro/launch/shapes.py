@@ -1,0 +1,89 @@
+"""Assigned input shapes + ShapeDtypeStruct factories for the dry-run.
+
+Four shapes (assignment):
+    train_4k:     seq 4096,    global batch 256   -> train_step
+    prefill_32k:  seq 32768,   global batch 32    -> prefill (fills the cache)
+    decode_32k:   seq 32768,   global batch 128   -> serve_step (1 new token)
+    long_500k:    seq 524288,  global batch 1     -> serve_step; sub-quadratic
+                  context required: SSM/hybrid run natively (O(1) state);
+                  full-attention archs run the sliding-window variant
+                  (window 8192 ring cache) per DESIGN.md — no arch skips.
+
+``input_specs(cfg, shape)`` returns (step_kind, shape-struct kwargs, adapted
+cfg) where every tensor is a ShapeDtypeStruct (zero allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import init_cache
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _tree_sds(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def adapt_config(cfg, shape_name: str):
+    """Shape-driven config adaptation (long-context attention variant)."""
+    spec = SHAPES[shape_name]
+    if shape_name == "long_500k" and cfg.arch_type in ("dense", "moe", "vlm", "encdec"):
+        cfg = cfg.replace(attention="sliding_window", window=8192)
+    return cfg
+
+
+def cache_smax(cfg, shape_name: str) -> int:
+    spec = SHAPES[shape_name]
+    if cfg.arch_type == "hybrid":
+        return cfg.local_window
+    if cfg.attention == "sliding_window":
+        return cfg.window
+    return spec["seq"]
+
+
+def input_specs(cfg, shape_name: str):
+    """Returns (kind, kwargs-of-ShapeDtypeStructs, adapted_cfg)."""
+    spec = SHAPES[shape_name]
+    cfg = adapt_config(cfg, shape_name)
+    B, S = spec["batch"], spec["seq"]
+    kind = spec["kind"]
+    dt = cfg.jdtype
+    if kind == "train":
+        toks = S
+        kw = {}
+        if cfg.arch_type == "vlm":
+            toks = S - cfg.n_patches
+            kw["embeds"] = SDS((B, cfg.n_patches, cfg.d_model), dt)
+        if cfg.arch_type == "encdec":
+            kw["enc_embeds"] = SDS((B, cfg.enc_len, cfg.d_model), dt)
+        batch = {
+            "tokens": SDS((B, toks), jnp.int32),
+            "labels": SDS((B, toks), jnp.int32),
+            **kw,
+        }
+        return kind, {"batch": batch}, cfg
+    if kind == "prefill":
+        smax = cache_smax(cfg, shape_name)
+        cache = _tree_sds(jax.eval_shape(lambda: init_cache(cfg, B, smax)))
+        toks = S
+        kw = {}
+        if cfg.arch_type == "vlm":
+            toks = S - cfg.n_patches
+            kw["embeds"] = SDS((B, cfg.n_patches, cfg.d_model), dt)
+        if cfg.arch_type == "encdec":
+            kw["enc_embeds"] = SDS((B, cfg.enc_len, cfg.d_model), dt)
+        return kind, {"cache": cache, "tokens": SDS((B, toks), jnp.int32), **kw}, cfg
+    # decode
+    smax = cache_smax(cfg, shape_name)
+    cache = _tree_sds(jax.eval_shape(lambda: init_cache(cfg, B, smax)))
+    return kind, {"cache": cache, "tokens": SDS((B, 1), jnp.int32)}, cfg

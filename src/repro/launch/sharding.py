@@ -1,0 +1,204 @@
+"""Parameter / cache / batch sharding rules.
+
+Scheme: 2D FSDP x tensor-parallel.
+  * up-projections  (.., d_in, d_out): d_in -> data (FSDP), d_out -> model (TP)
+  * down-projections (.., d_in, d_out): d_in -> model, d_out -> data
+  * MoE experts (L, E, ..): E -> model (expert parallel), dense dim -> data
+  * per-channel vectors (biases, A_log, conv): last dim -> model
+  * embeddings (V, D): V -> model, D -> data  (falls back when V % model != 0)
+  * norms and scalars: replicated
+  * the pod axis never shards parameters (pure data parallel across pods)
+
+Every rule is divisibility-guarded: an axis that does not divide is dropped
+(replicated) rather than erroring, so odd vocabularies (49155, 51865, 92553)
+lower cleanly.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (param-name regex, per-ndim spec templates). Leading layer/group axes are
+# padded with None automatically: the template matches the TRAILING dims.
+_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed$", ("model", "data")),
+    (r"lm_head$", ("data", "model")),
+    (r"patch_proj$", ("data", "model")),
+    (r"(wq|wk|wv)$", ("data", "model")),
+    (r"wo$", ("model", "data")),
+    (r"(bq|bk|bv)$", ("model",)),
+    (r"router$", ("data", None)),
+    (r"(w_gate|w_up)$", ("data", "model")),       # dense mlp (d, f)
+    (r"w_down$", ("model", "data")),              # dense mlp (f, d)
+    (r"w_in$", ("data", "model")),
+    (r"w_out$", ("model", "data")),
+    (r"(w_x|w_y)$", ("data", "model")),
+    (r"(w_a|w_i)$", ("model", None, None)),  # block-diagonal (nb, bd, bd)
+    (r"conv_w$", (None, "model")),
+    (r"(conv_b|A_log|dt_bias|lam|norm_z|b_a|b_i)$", ("model",)),
+    (r"^D$", ("model",)),
+]
+# MoE expert tensors (detected by ndim): (L, E, d, f) / (L, E, f, d)
+_MOE_RULES = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _spec_for(path: str, shape: tuple, mesh, cfg=None) -> P:
+    name = path.split("/")[-1]
+    ndim = len(shape)
+    tmpl = None
+    if name in _MOE_RULES and ndim == 4:
+        tmpl = _MOE_RULES[name]
+    else:
+        for pat, t in _RULES:
+            if re.search(pat, name):
+                tmpl = t
+                break
+    if tmpl is None:
+        return P()
+    tmpl = list(tmpl)
+    if len(tmpl) > ndim:
+        return P()
+    # head-aware guard: never split *inside* an attention head — tensor
+    # parallelism must tile whole (kv-)heads or XLA is forced to replicate
+    # the (B, T, H, S) attention intermediates (§Perf cycle 1).
+    if cfg is not None and "model" in mesh.axis_names and getattr(cfg, "n_heads", 0):
+        msize = mesh.shape["model"]
+        if re.search(r"(wk|wv|bk|bv)$", name) and cfg.n_kv_heads % msize != 0:
+            tmpl = [None if a == "model" else a for a in tmpl]
+        if re.search(r"(wq|bq|wo)$", name) and cfg.n_heads % msize != 0:
+            tmpl = [None if a == "model" else a for a in tmpl]
+    full = (None,) * (ndim - len(tmpl)) + tuple(tmpl)
+    # divisibility guard
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None or ax not in mesh.axis_names or dim % mesh.shape[ax] != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(mesh, params_shapes, cfg=None, mode: str = "train"):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStructs.
+
+    mode "train": 2D FSDP x TP (weights also sharded on the data axis; the
+                  compiler all-gathers per layer — right when amortised over
+                  optimizer state and long sequences).
+    mode "serve": pure TP — weights sharded on "model" only and *replicated*
+                  across data.  Decode reads the weights once per token; the
+                  per-step FSDP all-gather would dominate the step (§Perf
+                  cycle 3).
+    """
+
+    def assign(kp, leaf):
+        spec = _spec_for(_path_str(kp), leaf.shape, mesh, cfg)
+        if mode == "serve":
+            spec = P(*(None if ax == "data" or (isinstance(ax, tuple) and "data" in ax) else ax
+                       for ax in (tuple(spec) + (None,) * (len(leaf.shape) - len(spec)))))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+def opt_shardings(mesh, param_sh, opt_state_shapes):
+    """AdamW state: mu/nu mirror params; step replicated."""
+    from repro.training.optim import AdamWState
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree.map(lambda s: s, param_sh),
+        nu=jax.tree.map(lambda s: s, param_sh),
+    )
+
+
+def batch_spec(mesh) -> P:
+    return P(("pod", "data") if "pod" in mesh.axis_names else "data")
+
+
+def batch_shardings(mesh, batch_shapes):
+    """Shard the leading batch dim of every batch leaf (guarded)."""
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def assign(leaf):
+        if leaf.shape and leaf.shape[0] % total == 0:
+            return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(assign, batch_shapes)
+
+
+def cache_shardings(mesh, cache_shapes, *, batch_sharded: bool):
+    """Decode-cache shardings.
+
+    Attention k/v (L, B, S, Hkv, hd): batch -> data when divisible; the slot
+    axis S -> model (flash-decode split-S: softmax partials reduce over the
+    model axis).  Recurrent states (L, B, H, P, N): batch -> data, heads ->
+    model.  pos/len replicated.
+    """
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dsize = int(np.prod([mesh.shape[a] for a in axes]))
+    msize = mesh.shape["model"]
+    daxis = axes if len(axes) > 1 else axes[0]
+
+    def assign(kp, leaf):
+        path = _path_str(kp)
+        name = path.split("/")[-1]
+        shp = leaf.shape
+        if name in ("pos", "len"):
+            return NamedSharding(mesh, P())
+        if name in ("k", "v") or name in ("cross_k", "cross_v"):
+            b_ok = batch_sharded and len(shp) >= 2 and shp[1] % dsize == 0
+            s_ok = len(shp) >= 3 and shp[2] % msize == 0
+            return NamedSharding(
+                mesh,
+                P(None, daxis if b_ok else None, "model" if s_ok else None, None, None),
+            )
+        if name in ("state",):  # (L, B, H, P, N)
+            b_ok = batch_sharded and shp[1] % dsize == 0
+            h_ok = len(shp) > 2 and shp[2] % msize == 0
+            return NamedSharding(
+                mesh, P(*((None, daxis if b_ok else None, "model" if h_ok else None) + (None,) * (len(shp) - 3)))
+            )
+        if name in ("conv",):  # (L, B, K-1, C)
+            b_ok = batch_sharded and shp[1] % dsize == 0
+            c_ok = shp[-1] % msize == 0
+            return NamedSharding(
+                mesh, P(*((None, daxis if b_ok else None) + (None,) * (len(shp) - 3) + ("model" if c_ok else None,)))
+            )
+        if name in ("rec_state", "rec_conv"):  # (G, g-1, B, ..., D)
+            b_ok = batch_sharded and shp[2] % dsize == 0
+            d_ok = shp[-1] % msize == 0
+            mid = (None,) * (len(shp) - 4)
+            return NamedSharding(
+                mesh, P(*((None, None, daxis if b_ok else None) + mid + ("model" if d_ok else None,)))
+            )
+        if name in ("tail_state", "tail_conv"):  # (rem, B, ..., D)
+            b_ok = batch_sharded and shp[1] % dsize == 0
+            d_ok = shp[-1] % msize == 0
+            mid = (None,) * (len(shp) - 3)
+            return NamedSharding(
+                mesh, P(*((None, daxis if b_ok else None) + mid + ("model" if d_ok else None,)))
+            )
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)

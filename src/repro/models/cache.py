@@ -1,0 +1,74 @@
+"""KV / recurrent-state cache structures.
+
+Attention caches are ring buffers of size ``Smax`` (= window for
+sliding-window archs): slot = position % Smax, with absolute positions stored
+so masks can express both causality and the sliding window uniformly.  All
+requests in a batch advance in lockstep (the engine pads), so ``len`` and
+``pos`` are shared across the batch.
+
+Layout (leading layer axis L, scanned):
+    attn:  k, v: (L, B, Smax, Hkv, hd);  pos: (Smax,) int32;  len: () int32
+    ssm:   state: (L, B, H, P, N); conv: (L, B, K-1, C);      len: () int32
+    rglru: state: (L, B, D); conv: (L, B, 3, D);              len: () int32
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_attn_cache(cfg, n_layers: int, batch: int, smax: int, dtype):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, batch, smax, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, smax, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((smax,), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_slots(length: jax.Array, T: int, smax: int) -> jax.Array:
+    return (length + jnp.arange(T, dtype=jnp.int32)) % smax
+
+
+def append_layer_kv(k_cache, v_cache, k_new, v_new, slots):
+    """k_cache: (B, Smax, Hkv, hd); k_new: (B, T, Hkv, hd); slots: (T,)."""
+    return k_cache.at[:, slots].set(k_new.astype(k_cache.dtype)), v_cache.at[:, slots].set(
+        v_new.astype(v_cache.dtype)
+    )
+
+
+def attn_mask_from_pos(pos: jax.Array, q_positions: jax.Array, window: int = 0) -> jax.Array:
+    """(T, Smax) mask: slot valid iff 0 <= pos[s] <= q_pos[t] (and within the
+    window when sliding).  q_positions: (T,) absolute positions of queries."""
+    s = pos[None, :]
+    t = q_positions[:, None]
+    m = (s >= 0) & (s <= t)
+    if window:
+        m = m & (s > t - window)
+    return m[None, None]  # (1, 1, T, Smax)
+
+
+def tree_mask_from_pos(
+    pos: jax.Array, q_positions: jax.Array, anc: jax.Array, self_slots: jax.Array, window: int = 0
+) -> jax.Array:
+    """Tree-pass mask over cache slots that now *contain* the tree tokens.
+
+    The T tree tokens were appended into ``self_slots``; a tree token may
+    attend to (a) any older cache slot per the causal/window rule against the
+    *branch-context* boundary, and (b) its tree ancestors (anc, (T, T),
+    including self).
+    """
+    base = attn_mask_from_pos(pos, q_positions, window)[0, 0]  # (T, Smax)
+    # cut out the tree's own slots from the causal rule, then re-add ancestors
+    is_self = jnp.zeros(pos.shape, bool).at[self_slots].set(True)  # (Smax,)
+    base = base & ~is_self[None, :]
+    if anc.ndim == 3:  # batched ancestor masks (B, T, T)
+        tree_part = (
+            jnp.zeros((anc.shape[0],) + base.shape, bool)
+            .at[:, :, self_slots]
+            .set(anc.astype(bool))
+        )
+        return (base[None] | tree_part)[:, None]  # (B, 1, T, Smax)
+    tree_part = jnp.zeros(base.shape, bool).at[:, self_slots].set(anc.astype(bool))
+    return (base | tree_part)[None, None]  # (1, 1, T, Smax)

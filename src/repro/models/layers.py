@@ -1,0 +1,138 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (full / sliding-window /
+decode / tree modes), SwiGLU MLP, embeddings.
+
+All functions are pure; parameters are plain pytrees.  Attention is written
+against an explicit additive mask so the same code path serves training
+(causal), prefill, single-token decode against a KV cache, and the
+speculative *tree pass* (ancestor mask within the speculation block).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding.  x: (..., T, H, D); positions: (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key, din, dout, dtype, scale=None):
+    s = scale if scale is not None else 1.0 / np.sqrt(din)
+    return (jax.random.normal(key, (din, dout), jnp.float32) * s).astype(dtype)
+
+
+def attention_weights_init(cfg, key):
+    hd = cfg.hd
+    ks = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    p = {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.n_heads * hd, dt),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    return p
+
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Grouped-query attention core.
+
+    q: (B, T, H, D);  k, v: (B, S, Hkv, D);  mask: broadcastable to
+    (B, 1, T, S) boolean (True = attend) or None.
+    Returns (B, T, H, D).
+    """
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, D)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) / np.sqrt(D)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None, :, :] if mask.ndim == 4 else mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", w.astype(v.dtype), v)
+    return out.reshape(B, T, H, D)
+
+
+def causal_mask(T: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    m = j <= i
+    if window:
+        m = m & (i - j < window)
+    return m[None, None]  # (1, 1, T, T)
+
+
+def decode_mask(S: int, cache_len: jax.Array, window: int = 0) -> jax.Array:
+    """Mask for T query tokens appended after cache_len context tokens.
+    Valid key positions: j < cache_len (+ window constraint handled by the
+    caller's position arithmetic for ring caches)."""
+    j = jnp.arange(S)[None, :]
+    m = j < cache_len[:, None] if cache_len.ndim else j < cache_len
+    return m[:, None, None, :] if m.ndim == 2 else m[None, None, None, :]
+
+
+def tree_pass_mask(S: int, cache_len: jax.Array, anc: jax.Array) -> jax.Array:
+    """Mask for a speculative tree pass: T tree tokens attend to (a) all cache
+    positions < cache_len and (b) tree ancestors per anc (B?, T, T) or (T, T).
+
+    Returns (B, 1, T, S + T) given anc (B, T, T), or (1, 1, T, S+T) for (T, T).
+    """
+    if anc.ndim == 2:
+        anc = anc[None]
+    B, T, _ = anc.shape
+    j = jnp.arange(S)[None, None, :]
+    cl = cache_len if getattr(cache_len, "ndim", 0) else jnp.full((B,), cache_len)
+    prefix = jnp.broadcast_to(j < cl[:, None, None], (B, T, S))
+    full = jnp.concatenate([prefix, anc.astype(bool)], axis=-1)
+    return full[:, None]  # (B, 1, T, S+T)
+
+
+def swiglu_init(cfg, key, d_ff=None):
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {
+        "w_gate": init_dense(ks[0], cfg.d_model, f, dt),
+        "w_up": init_dense(ks[1], cfg.d_model, f, dt),
+        "w_down": init_dense(ks[2], f, cfg.d_model, dt),
+    }
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def project_qkv(p, cfg, x):
+    hd = cfg.hd
+    B, T, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(B, T, cfg.n_heads, hd),
+        k.reshape(B, T, cfg.n_kv_heads, hd),
+        v.reshape(B, T, cfg.n_kv_heads, hd),
+    )

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts layer with sort-free capacity dispatch.
+
+TPU-native formulation: tokens are scattered into per-expert capacity buffers
+(E, C, D) via computed slot indices (rank-within-expert by cumulative count),
+expert FFNs run as one batched einsum (E, C, D) x (E, D, F), and outputs are
+gathered back with router-probability weighting.  Under a mesh that shards
+tokens on the data axis and experts on the model axis, XLA SPMD lowers the
+scatter/gather pair to all-to-all collectives — the communication pattern of
+expert parallelism.  Overflow beyond capacity is dropped (standard
+capacity-factor semantics); an auxiliary load-balancing loss is returned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_dense
+
+
+def init_moe(cfg, key):
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": init_dense(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) / np.sqrt(d)).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) / np.sqrt(d)).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / np.sqrt(f)).astype(dt),
+    }
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, int(np.ceil(c / 8) * 8))  # pad to an 8-multiple for TPU tiling
+
+
+def moe_apply(p, cfg, x: jax.Array):
+    """x: (B, S, D) -> (B, S, D), aux_loss (scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    C = moe_capacity(N, cfg)
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (N, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalised gates
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # slot assignment: rank of each (token, choice) within its expert.
+    # Sort-based (MaxText-style): a stable argsort groups the expert ids, a
+    # tiny E-length cumsum gives group starts, and ranks fall out of the
+    # sorted positions.  (The one-hot cumsum alternative lowers to
+    # O(N*k * window) reduce-windows — 40x the matmul flops at train_4k;
+    # see EXPERIMENTS.md §Perf cycle 2.)
+    flat_e = top_e.reshape(-1)  # (N*k,)
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    hist = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1]])
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[flat_e[order]]
+    slot = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    keep = slot < C
+    flat_idx = jnp.where(keep, flat_e * C + slot, E * C)  # E*C = drop bin
+
+    # dispatch: (E*C + 1, D) buffers.
+    # NOTE (§Perf cycle 5, REFUTED): constraining this buffer to 2D
+    # (experts -> model, capacity -> data) via act_sharding.pin_moe_buffer
+    # made both the memory and collective terms ~2x WORSE at train_4k —
+    # the combine gather back from a capacity-sharded buffer forces a full
+    # reshard.  XLA's own placement (experts -> model from the weight specs,
+    # capacity unsharded) is the better schedule; left as measured.
+    src = jnp.repeat(xf, k, axis=0)  # (N*k, D)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[flat_idx].add(src)
+    buf = buf[: E * C].reshape(E, C, D)
+
+    # expert FFN: batched SwiGLU
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_up"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((1, D), out_buf.dtype)], axis=0)
+
+    # combine: gather each (token, choice) result and weight by the gate
+    gathered = out_buf[flat_idx]  # (N*k, D) — dropped tokens hit the zero row
+    weighted = gathered * top_p.reshape(-1)[:, None].astype(gathered.dtype)
+    y = jnp.sum(weighted.reshape(N, k, D), axis=1)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+
+    r_t = sigmoid(W_a x_t + b_a)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                    (input gate)
+    a_t = exp(c * softplus(Lambda) * (-r_t))        (log-space decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+computed with an associative scan over (a, b) pairs (the recurrence is linear
+given the gates), preceded by a temporal causal conv (kernel 4) and wrapped in
+the Griffin recurrent-block projections.  Decode carries (h, conv-tail) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_dense
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+def init_rglru(cfg, key):
+    d, dl = cfg.d_model, cfg.lru_d
+    nb = cfg.lru_blocks
+    assert dl % nb == 0, (dl, nb)
+    bd = dl // nb
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    blk = lambda k: (jax.random.normal(k, (nb, bd, bd), jnp.float32) / np.sqrt(bd))
+    return {
+        "w_x": init_dense(ks[0], d, dl, dt),  # input branch
+        "w_y": init_dense(ks[1], d, dl, dt),  # gate branch (GeGLU-style)
+        "conv_w": (jax.random.normal(ks[2], (4, dl), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((dl,), dt),
+        # block-diagonal gates (Griffin): communication-free under TP
+        "w_a": blk(ks[3]),
+        "b_a": jnp.zeros((dl,), jnp.float32),
+        "w_i": blk(ks[4]),
+        "b_i": jnp.zeros((dl,), jnp.float32),
+        "lam": jnp.asarray(np.linspace(-4.3, -11.5, dl), jnp.float32),  # a in (.9, .999)
+        "w_out": init_dense(ks[5], dl, d, dt),
+    }
+
+
+def _block_gate(x, w):
+    """x: (B, S, dl); w: (nb, bd, bd) block-diagonal -> (B, S, dl)."""
+    B, S, dl = x.shape
+    nb, bd, _ = w.shape
+    xr = x.reshape(B, S, nb, bd)
+    return jnp.einsum("bsnd,nde->bsne", xr, w).reshape(B, S, dl)
+
+
+def _lru_scan(log_a: jax.Array, b: jax.Array, h0: jax.Array | None):
+    """h_t = exp(log_a_t) h_{t-1} + b_t  via associative scan over time axis 1.
+    log_a, b: (B, S, D)."""
+
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    la_c, b_c = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    if h0 is not None:
+        b_c = b_c + h0[:, None, :] * jnp.exp(la_c)
+    return b_c
+
+
+def rglru_apply(p, cfg, u: jax.Array, cache: dict | None):
+    """u: (B, S, d_model) -> (out, new_cache)."""
+    x = u @ p["w_x"]
+    gate = jax.nn.gelu(u @ p["w_y"])
+    conv_tail = cache.get("conv") if cache else None
+    x, new_tail = _causal_conv(x, p["conv_w"], p["conv_b"], conv_tail)
+
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_gate(xf, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(_block_gate(xf, p["w_i"]) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B, S, D), negative
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * xf)
+
+    h0 = cache.get("state") if cache else None
+    if x.shape[1] == 1 and h0 is not None:
+        h = h0 * jnp.exp(log_a[:, 0]) + b[:, 0]
+        y = h[:, None]
+        new_state = h
+    else:
+        y = _lru_scan(log_a, b, h0)
+        new_state = y[:, -1]
+    out = (y.astype(u.dtype) * gate) @ p["w_out"]
+    return out, {"state": new_state, "conv": new_tail}

@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked for TPU.
+
+The SSD recurrence per head h with state (P, N):
+
+    s_t = exp(dt_t * A) * s_{t-1} + dt_t * B_t x_t^T      (outer product)
+    y_t = C_t . s_t  + D * x_t
+
+computed with the chunked dual form (arXiv:2405.21060): within a chunk of Q
+tokens the contribution is a masked quadratic "attention" with decay kernel
+L = exp(segsum(dtA)); across chunks a (cheap) scan propagates the per-chunk
+states.  This maps the GPU kernel of the paper onto TPU-friendly einsums —
+the chunk dimension gives MXU-shaped matmuls and the cross-chunk scan is a
+lax.scan carrying (H, P, N) states.
+
+Decode: the cache is the recurrent state (B, H, P, N) + causal-conv tail
+(B, conv-1, d_conv_channels); one step is O(1) in sequence length (this is
+why the SSM archs run the 500k-context shape natively).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_dense
+
+
+def init_ssm(cfg, key):
+    d, di = cfg.d_model, cfg.d_inner
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    return {
+        # fused input projection: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "w_in": init_dense(ks[0], d, 2 * di + 2 * G * N + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_out": init_dense(ks[2], di, d, dt),
+        "norm_z": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv along time.  x: (B, S, C); w: (K, C).
+    tail: (B, K-1, C) carried state for decode, or None for prefill.
+    Returns (y, new_tail)."""
+    K = w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+        if tail is None
+        else tail.astype(x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(y), xp[:, -(K - 1) :]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) -> (..., Q, Q) lower-triangular segment sums
+    segsum[i, j] = sum_{j < m <= i} a[m]."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)[:, None]
+    j = jnp.arange(Q)[None, :]
+    return jnp.where(j <= i, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x:   (b, S, H, P)   head inputs (already dt-scaled by the caller)
+    dtA: (b, S, H)      log-decay increments (negative)
+    B:   (b, S, G, N)   input maps     C: (b, S, G, N) output maps
+    Returns y (b, S, H, P) and final state (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, "sequence must be padded to the SSD chunk"
+    c = S // chunk
+    R = H // G  # heads per group
+    xr = x.reshape(b, c, chunk, H, P)
+    ar = dtA.reshape(b, c, chunk, H)
+    Br = B.reshape(b, c, chunk, G, N)
+    Cr = C.reshape(b, c, chunk, G, N)
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))  # (b, c, H, Q, Q)
+    CB = jnp.einsum("bcqgn,bcsgn->bcgqs", Cr, Br)  # (b, c, G, Q, Q)
+    CB = jnp.repeat(CB, R, axis=2)  # (b, c, H, Q, Q)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", CB * L, xr)
+
+    # per-chunk states
+    a_cum = jnp.cumsum(ar, axis=2)  # (b, c, Q, H)
+    a_tot = a_cum[:, :, -1:, :]  # (b, c, 1, H)
+    decay_in = jnp.exp(a_tot - a_cum)  # weight of token q into the chunk state
+    Brep = jnp.repeat(Br, R, axis=3) if G != H else Br
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Brep, decay_in, xr)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_tot[:, :, 0, :])  # (b, c, H)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_c, dec = inp
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    init = jnp.zeros((b, H, P, N), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, c, H, P, N)
+
+    # off-diagonal (carry-in) term
+    Crep = jnp.repeat(Cr, R, axis=3) if G != H else Cr
+    decay_out = jnp.exp(a_cum)  # (b, c, Q, H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Crep, decay_out, prev_states)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final
+
+
+def ssm_apply(p, cfg, u: jax.Array, cache: dict | None):
+    """Full Mamba-2 mixer.  u: (B, S, d_model).
+
+    cache: None for train/prefill, else {"state": (B,H,P,N), "conv": (B,K-1,C)}
+    for O(1) decode (S small, processed recurrently).
+    Returns (y, new_cache).
+    """
+    B_, S, d = u.shape
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = u @ p["w_in"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + di + 2 * G * N], axis=-1)
+    conv_tail = cache.get("conv") if cache else None
+    xBC, new_tail = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_tail)
+    x, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    x = x.reshape(B_, S, H, P)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    dtA = dt * A  # (B, S, H) log-decay
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    if cache is None or S > 1:
+        pad = (-S) % cfg.ssm_chunk
+        if pad:
+            xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtA_p = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+            Bp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            dtA_p, Bp, Cp = dtA, Bm, Cm
+        init_state = cache.get("state") if cache else None
+        y, state = ssd_chunked(xdt.astype(jnp.float32), dtA_p, Bp.astype(jnp.float32), Cp.astype(jnp.float32), cfg.ssm_chunk)
+        if init_state is not None:
+            # carry-in from an existing state: add C_t exp(cumsum dtA) s_init
+            a_cs = jnp.cumsum(dtA_p, axis=1)
+            Crep = jnp.repeat(Cp, H // G, axis=2) if G != H else Cp
+            y = y + jnp.einsum(
+                "bqhn,bqh,bhpn->bqhp", Crep.astype(jnp.float32), jnp.exp(a_cs), init_state
+            )
+            total = jnp.exp(jnp.sum(dtA_p, axis=1))  # (B, H)
+            state = state + init_state * total[:, :, None, None]
+        y = y[:, :S]
+    else:
+        # single-step recurrence
+        s = cache["state"]  # (B, H, P, N)
+        dec = jnp.exp(dtA[:, 0])  # (B, H)
+        Brep = jnp.repeat(Bm, H // G, axis=2) if G != H else Bm
+        Crep = jnp.repeat(Cm, H // G, axis=2) if G != H else Cm
+        s = s * dec[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xdt[:, 0].astype(jnp.float32), Brep[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Crep[:, 0].astype(jnp.float32), s)[:, None]
+        state = s
+
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B_, S, di).astype(u.dtype)
+    # gated RMSNorm (Mamba-2 style)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm_z"])).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    new_cache = {"state": state, "conv": new_tail}
+    return out, new_cache

@@ -1,0 +1,3 @@
+from repro.sampling.warp import warp_logits, warp_probs, sample_categorical
+
+__all__ = ["warp_logits", "warp_probs", "sample_categorical"]

@@ -1,0 +1,51 @@
+"""Logit/probability warping: temperature + nucleus (top-p) sampling.
+
+All verification algorithms in this framework operate on *warped* target and
+draft distributions: the paper evaluates temperatures {0.2..1.2} and nucleus
+{0.9, 0.99}.  Losslessness is always w.r.t. the warped target distribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def warp_logits(logits: jax.Array, temperature: float = 1.0, top_p: float = 1.0) -> jax.Array:
+    """Apply temperature then nucleus filtering to logits.  Returns probabilities.
+
+    Works on any leading batch shape; the last axis is the vocabulary.
+    temperature==0 is greedy (one-hot argmax).
+    """
+    if temperature == 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1], dtype=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+    return warp_probs(probs, top_p=top_p)
+
+
+def warp_probs(probs: jax.Array, top_p: float = 1.0) -> jax.Array:
+    """Nucleus-filter a probability vector (last axis), renormalising.
+
+    Keeps the smallest prefix of the sorted distribution whose mass is
+    >= top_p (the token that crosses the threshold is kept, matching HF
+    semantics).
+    """
+    if top_p >= 1.0:
+        return probs
+    sort_idx = jnp.argsort(probs, axis=-1)[..., ::-1]
+    sorted_p = jnp.take_along_axis(probs, sort_idx, axis=-1)
+    csum = jnp.cumsum(sorted_p, axis=-1)
+    # keep tokens whose *preceding* cumulative mass is < top_p
+    keep_sorted = (csum - sorted_p) < top_p
+    keep = jnp.zeros_like(keep_sorted)
+    keep = jnp.put_along_axis(keep, sort_idx, keep_sorted, axis=-1, inplace=False)
+    filtered = jnp.where(keep, probs, 0.0)
+    return filtered / jnp.sum(filtered, axis=-1, keepdims=True)
+
+
+def sample_categorical(key: jax.Array, probs: jax.Array) -> jax.Array:
+    """Sample token indices from probability vectors (last axis = vocab)."""
+    # Gumbel trick on log-probs; robust to zeros.
+    logp = jnp.log(jnp.clip(probs, 1e-30, None))
+    g = jax.random.gumbel(key, probs.shape, dtype=jnp.float32)
+    g = jnp.where(probs > 0, g, -jnp.inf)
+    return jnp.argmax(logp + g, axis=-1)

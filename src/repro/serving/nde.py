@@ -1,0 +1,102 @@
+"""NDE (neural dynamic expansion) selector wiring for the engine.
+
+Builds App. E features from the stream state, evaluates the selector MLP, and
+returns the (K, L1, L2) action.  Also provides the *analytic* selector
+(beyond-paper): exhaustive Eq. 9 maximisation using the exact Eq. 3 branching
+estimator against the engine's own models.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delayed import LatencyModel
+from repro.core.selector import ActionSpace, make_scalar_features, select_action
+
+
+class NeuralSelector:
+    """selector(stream, engine) -> (K, L1, L2) using a trained MLP policy."""
+
+    def __init__(self, params, cfg, latency: LatencyModel, sampling):
+        self.params = params
+        self.cfg = cfg
+        self.latency = latency
+        self.sampling = sampling
+
+    def features(self, stream, engine):
+        V = engine.tc.vocab
+        p_prev = stream.get("p_prev")
+        q_prev = stream.get("q_prev")
+        if p_prev is None:
+            p_prev = np.full(V, 1.0 / V)
+        if q_prev is None:
+            q_prev = np.full(V, 1.0 / V)
+        # q at root: the draft dist produced while ingesting the delta is not
+        # yet known at selection time for the *next* root — use q_prev as the
+        # freshest proxy (matches "previous token" features of App. E).
+        l = len(stream["committed"])
+        scal = make_scalar_features(
+            p_prev,
+            q_prev,
+            q_prev,
+            l,
+            self.sampling.temperature,
+            self.sampling.top_p,
+            self.latency.t_q(l),
+            self.latency.t_p(l),
+        )
+        return (
+            jnp.asarray(stream["h_prev_p"][None]),
+            jnp.asarray(stream["h_prev_q"][None]),
+            jnp.asarray(stream["h_prev_q"][None]),
+            jnp.asarray(scal[None]),
+        )
+
+    def __call__(self, stream, engine):
+        hp, hq, hc, sc = self.features(stream, engine)
+        return select_action(self.params, hp, hq, hc, sc, self.cfg.space)
+
+
+class StaticSelector:
+    def __init__(self, K, L1, L2):
+        self.a = (K, L1, L2)
+
+    def __call__(self, stream, engine):
+        return self.a
+
+
+class AnalyticSelector:
+    """Beyond-paper oracle: enumerate a small action grid, estimate Eq. 3
+    block efficiency with s tree samples against the engine's real draft and
+    target, and pick argmax of Ê[tau+1]/T̂ (Eq. 9).  Expensive (extra model
+    calls) — used offline to label NDE training data and as an upper bound."""
+
+    def __init__(self, actions, latency: LatencyModel, solver: str, s: int = 1, seed: int = 0):
+        self.actions = actions
+        self.latency = latency
+        self.solver = solver
+        self.s = s
+        self.rng = np.random.default_rng(seed)
+
+    def __call__(self, stream, engine):
+        from repro.core.delayed import estimate_block_efficiency
+
+        # model oracles over *contexts relative to the committed prefix*
+        base = list(stream["committed"])
+
+        def q_fn(ctx):
+            return engine.peek_draft_dist(stream, list(ctx))
+
+        def p_fn(ctx):
+            return engine.peek_target_dist(stream, list(ctx))
+
+        best, best_tps = self.actions[0], -1.0
+        l = len(base)
+        for K, L1, L2 in self.actions:
+            eff = estimate_block_efficiency(
+                self.rng, q_fn, p_fn, self.solver, K, L1, L2, context=(), s=self.s
+            )
+            tps = eff / self.latency.action_time(l, K, L1, L2)
+            if tps > best_tps:
+                best, best_tps = (K, L1, L2), tps
+        return best

@@ -1,0 +1,50 @@
+"""Jittable batched serving steps — the units the dry-run lowers.
+
+serve_step:      one new token per request against a KV/state cache of
+                 ``seq_len`` (the decode_32k / long_500k shapes).
+tree_serve_step: one speculation block per request — T tree tokens with a
+                 shared topology (the production form of the paper's target
+                 pass; used by the benchmarks to price tree passes).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import forward
+
+
+def make_serve_step(cfg):
+    """(params, cache, tokens (B, 1)) -> (logits (B, 1, V), new_cache)."""
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache, _ = forward(params, cfg, tokens, mode="decode", cache=cache)
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_tree_serve_step(cfg):
+    """(params, cache, tokens (B, T), anc (T, T)) -> (logits, new_cache).
+
+    The ancestor mask is shared across the batch (lockstep speculation with a
+    common (K, L1, L2) action), matching the engine's batched deployment.
+    """
+
+    def tree_step(params, cache, tokens, anc):
+        logits, new_cache, _ = forward(params, cfg, tokens, mode="tree", cache=cache, anc=anc)
+        return logits, new_cache
+
+    return tree_step
+
+
+def make_prefill_step(cfg):
+    def prefill(params, cache, tokens, enc_embeds=None, embeds=None):
+        logits, new_cache, _ = forward(
+            params, cfg, tokens, mode="full", cache=cache, enc_embeds=enc_embeds, embeds=embeds
+        )
+        return logits, new_cache
+
+    return prefill

@@ -1,0 +1,68 @@
+"""Checkpointing: pytree <-> .npz with a flattened key scheme + JSON meta.
+
+No orbax in this environment; .npz keeps the dependency surface at numpy
+while preserving dtypes (bf16 stored as uint16 views with a dtype tag).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save_checkpoint(path: str, params, step: int = 0, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            a = a.view(np.uint16)
+        arrays[k.replace("/", "__")] = a
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"step": step, "dtypes": dtypes, "meta": meta or {}}, f)
+
+
+def load_checkpoint(path: str, template=None):
+    """Returns (params, step).  With a template pytree the nested structure is
+    rebuilt; otherwise a flat {path: array} dict is returned."""
+    z = np.load(path, allow_pickle=False)
+    with open(path + ".meta.json") as f:
+        info = json.load(f)
+    flat = {}
+    for k in z.files:
+        key = k.replace("__", "/")
+        a = z[k]
+        if info["dtypes"].get(key) == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        flat[key] = jnp.asarray(a)
+    if template is None:
+        return flat, info["step"]
+
+    def rebuild(tmpl, prefix=""):
+        if isinstance(tmpl, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tmpl.items()}
+        if isinstance(tmpl, (list, tuple)):
+            return type(tmpl)(rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tmpl))
+        return flat[prefix[:-1]]
+
+    return rebuild(template), info["step"]

@@ -1,0 +1,52 @@
+"""Generic training loop: jit'd train_step + logging + checkpointing.
+
+Used by launch/train.py (distributed via jit in/out shardings installed by
+the caller) and by the end-to-end example (single host).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models.transformer import init_params, make_train_step
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optim import AdamW
+
+
+def train(
+    cfg,
+    data_iter,
+    *,
+    steps: int = 100,
+    lr: float = 3e-4,
+    seed: int = 0,
+    log_every: int = 10,
+    ckpt_path: str | None = None,
+    ckpt_every: int = 0,
+    train_step=None,
+    params=None,
+    opt=None,
+    log_fn=print,
+):
+    opt = opt or AdamW(lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 1))
+    params = params if params is not None else init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = train_step or jax.jit(make_train_step(cfg, opt))
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            l = float(loss)
+            losses.append((i + 1, l))
+            dt = time.time() - t0
+            tok = np.prod(batch["tokens"].shape)
+            log_fn(f"step {i+1:5d}  loss {l:.4f}  {tok * (i + 1) / dt:.0f} tok/s")
+        if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_path, params, step=i + 1)
+    if ckpt_path:
+        save_checkpoint(ckpt_path, params, step=steps)
+    return params, losses

@@ -1,0 +1,69 @@
+"""Hand-written optimizers (no optax in this environment).
+
+AdamW over arbitrary pytrees, with optional cosine learning-rate schedule and
+global-norm gradient clipping.  State is a pytree mirroring the params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 0
+    total_steps: int | None = None  # enables cosine decay when set
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        lr = jnp.asarray(self.lr, jnp.float32)
+        if self.warmup_steps > 0:
+            lr = lr * jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        if self.total_steps is not None:
+            frac = jnp.clip(
+                (step - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0
+            )
+            lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.schedule(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return (p - lr * (mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p)).astype(
+                p.dtype
+            )
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)

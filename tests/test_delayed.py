@@ -1,0 +1,83 @@
+"""Delayed-expansion machinery: Eq. 3 estimator correctness, acceptance-depth
+analysis (Fig. 1 signal), and the sampling distributions."""
+import numpy as np
+import pytest
+
+from repro.core.delayed import (
+    acceptance_by_depth,
+    estimate_block_efficiency,
+    expected_block_efficiency,
+    l1_by_depth,
+)
+from repro.core.enumerate import (
+    RandomModel,
+    expected_block_dist,
+    iter_trees,
+    mean_block_len,
+)
+from repro.core.trees import attach_target, build_delayed_tree, tree_ancestor_mask
+from repro.core.verify import verify_topdown_output_dist
+
+
+@pytest.mark.parametrize("solver", ["specinfer", "spectr", "naivetree"])
+@pytest.mark.parametrize("K,L1,L2", [(2, 1, 1), (2, 0, 2)])
+def test_eq3_estimator_matches_exact_block_length(solver, K, L1, L2):
+    """Eq. 3 (reach-probability sum) == expected emitted block length from the
+    exact conditional output distribution, tree by tree."""
+    model = RandomModel(3, seed=21, divergence=0.6)
+    for tree, prob in list(iter_trees(model, K, L1, L2))[:20]:
+        eq3 = expected_block_efficiency(tree, solver)
+        exact = mean_block_len(verify_topdown_output_dist(tree, solver))
+        assert abs(eq3 - exact) < 1e-10
+
+
+def test_eq3_outer_estimator_unbiasedness():
+    model = RandomModel(3, seed=2, divergence=0.5)
+    rng = np.random.default_rng(0)
+    # exact outer expectation
+    exact = 0.0
+    for tree, prob in iter_trees(model, 2, 1, 1):
+        exact += prob * expected_block_efficiency(tree, "specinfer")
+    est = np.mean([
+        estimate_block_efficiency(np.random.default_rng(s), model.q, model.p,
+                                  "specinfer", 2, 1, 1, s=1)
+        for s in range(500)
+    ])
+    assert abs(est - exact) < 0.12, (est, exact)  # ~2.5 sigma of the MC error
+
+
+def test_delayed_tree_structure():
+    model = RandomModel(5, seed=3)
+    rng = np.random.default_rng(1)
+    tree = build_delayed_tree(rng, model.q, K=3, L1=2, L2=2)
+    assert tree.n_nodes == 1 + 2 + 3 * 2
+    assert tree.max_depth() == 4
+    # trunk is a path; branch node has 3 children
+    assert len(tree.children(0)) == 1
+    trunk_end = 2
+    assert len(tree.children(trunk_end)) == 3
+    anc = tree_ancestor_mask(tree.parent)
+    assert anc[0, 0] and anc.sum(1).max() == 5  # leaf has 5 ancestors incl self
+
+
+def test_acceptance_decreases_with_divergence():
+    """Def. 5.1 sanity: higher draft-target divergence -> lower acceptance."""
+    m_close = RandomModel(6, seed=4, divergence=0.1)
+    m_far = RandomModel(6, seed=4, divergence=0.9)
+    rng = np.random.default_rng(2)
+    accs = {}
+    for name, m in [("close", m_close), ("far", m_far)]:
+        tree = build_delayed_tree(rng, m.q, K=2, L1=1, L2=1)
+        attach_target(tree, m.p)
+        vals = [a for _, a in acceptance_by_depth(tree, "specinfer", 2)]
+        accs[name] = np.mean(vals)
+    assert accs["close"] > accs["far"]
+
+
+def test_l1_by_depth_shape():
+    model = RandomModel(4, seed=6)
+    rng = np.random.default_rng(3)
+    tree = attach_target(build_delayed_tree(rng, model.q, 2, 1, 2), model.p)
+    rows = l1_by_depth(tree)
+    assert len(rows) == tree.n_nodes
+    assert all(0 <= d <= 3 and 0 <= v <= 2 + 1e-12 for d, v in rows)

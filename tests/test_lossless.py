@@ -1,0 +1,77 @@
+"""Losslessness of whole-tree verification — the paper's central invariant.
+
+Exact enumeration over BOTH draft-tree randomness and verifier randomness:
+G(y) (the composed prefix probability, see core/enumerate.py) must match the
+target process for every string, for every verifier, on delayed trees of
+several (K, L1, L2) including root rollouts and pure paths.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.enumerate import (
+    RandomModel,
+    expected_block_dist,
+    lossless_gap,
+)
+from repro.core.traversal import verify_traversal_output_dist
+from repro.core.verify import verify_bv_output_dist, verify_topdown_output_dist
+
+TOPDOWN = ["nss", "naivetree", "spectr", "specinfer", "khisti"]
+CASES = [(2, 0, 1), (2, 1, 1), (3, 0, 2), (2, 1, 2)]
+
+
+@pytest.mark.parametrize("solver", TOPDOWN)
+@pytest.mark.parametrize("K,L1,L2", [(2, 0, 1), (2, 1, 2)])
+def test_topdown_lossless(solver, K, L1, L2):
+    model = RandomModel(3, seed=11, divergence=0.7)
+    bd = expected_block_dist(
+        lambda t: verify_topdown_output_dist(t, solver), model, K, L1, L2
+    )
+    assert lossless_gap(bd, model, L1 + L2 + 1) < 1e-12
+
+
+@pytest.mark.parametrize("K,L1,L2", CASES + [(1, 0, 2), (1, 2, 1)])
+def test_traversal_lossless(K, L1, L2):
+    model = RandomModel(3, seed=5, divergence=0.8)
+    bd = expected_block_dist(verify_traversal_output_dist, model, K, L1, L2)
+    assert abs(sum(bd.values()) - 1.0) < 1e-12
+    assert lossless_gap(bd, model, L1 + L2 + 1) < 1e-12
+
+
+@pytest.mark.parametrize("L", [1, 2, 3])
+def test_bv_lossless(L):
+    model = RandomModel(3, seed=7, divergence=0.9)
+    bd = expected_block_dist(verify_bv_output_dist, model, 1, 0, L)
+    assert lossless_gap(bd, model, L + 1) < 1e-12
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 1.0))
+def test_traversal_lossless_hypothesis(seed, divergence):
+    model = RandomModel(3, seed=seed, divergence=divergence)
+    bd = expected_block_dist(verify_traversal_output_dist, model, 2, 1, 1)
+    assert lossless_gap(bd, model, 3) < 1e-12
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_specinfer_lossless_with_zero_support(seed):
+    model = RandomModel(3, seed=seed, divergence=0.9, zeros=True)
+    bd = expected_block_dist(
+        lambda t: verify_topdown_output_dist(t, "specinfer"), model, 2, 1, 1
+    )
+    assert lossless_gap(bd, model, 3) < 1e-12
+
+
+def test_traversal_beats_topdown_on_block_length():
+    """Sanity: on aligned-ish models Traversal's expected block length is at
+    least as large as NSS's (the paper's headline ordering at the extremes)."""
+    from repro.core.enumerate import mean_block_len
+
+    model = RandomModel(3, seed=9, divergence=0.5)
+    bd_t = expected_block_dist(verify_traversal_output_dist, model, 2, 0, 2)
+    bd_n = expected_block_dist(
+        lambda t: verify_topdown_output_dist(t, "nss"), model, 2, 0, 2
+    )
+    assert mean_block_len(bd_t) >= mean_block_len(bd_n) - 1e-9

@@ -1,0 +1,138 @@
+"""Model substrate tests: every assigned architecture's reduced config runs a
+forward pass + one train step on CPU (shape + NaN assertions), and the decode
+path is consistent with the full pass (exact in fp32)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke, list_arches
+from repro.models.transformer import forward, init_cache, init_params, make_train_step
+from repro.training.optim import AdamW
+
+B, T = 2, 16
+
+
+def _batch_kwargs(cfg, rng):
+    kw = {}
+    if cfg.arch_type == "encdec":
+        kw["enc_embeds"] = jnp.asarray(rng.standard_normal((B, cfg.enc_len, cfg.d_model)), cfg.jdtype)
+    if cfg.arch_type == "vlm":
+        kw["embeds"] = jnp.asarray(rng.standard_normal((B, cfg.n_patches, cfg.d_model)), cfg.jdtype)
+    return kw
+
+
+@pytest.mark.parametrize("arch", list_arches())
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    kw = _batch_kwargs(cfg, rng)
+    logits, _, extras = forward(params, cfg, toks, mode="full", **kw)
+    exp_T = T + (cfg.n_patches if cfg.arch_type == "vlm" else 0)
+    assert logits.shape == (B, exp_T, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1).at[:, -1].set(-1), **kw}
+    params2, _, loss = step(params, opt.init(params), batch)
+    assert np.isfinite(float(loss))
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32), np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "qwen3-moe-235b-a22b", "mamba2-2.7b",
+                                  "recurrentgemma-2b", "whisper-medium", "internvl2-26b"])
+def test_decode_consistency(arch):
+    cfg = get_smoke(arch).replace(dtype="float32")
+    rng = np.random.default_rng(1)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    kw = _batch_kwargs(cfg, rng)
+    cache = init_cache(cfg, B, 64)
+    lg, cache, _ = forward(params, cfg, toks, mode="full", cache=cache, **kw)
+    nxt = jnp.argmax(lg[:, -1:], -1)
+    lg2, cache, _ = forward(params, cfg, nxt, mode="decode", cache=cache)
+    toks2 = jnp.concatenate([toks, nxt], 1)
+    lg_full, _, _ = forward(params, cfg, toks2, mode="full", **kw)
+    if cfg.arch_type == "vlm":
+        lg_full = lg_full[:, cfg.n_patches:]
+    err = float(jnp.abs(lg2[:, -1] - lg_full[:, -1]).max())
+    assert err < 2e-4, err
+
+
+def test_tree_mode_matches_sequential_decode():
+    """A path-shaped 'tree' pass must equal sequential decode exactly."""
+    cfg = get_smoke("granite-8b").replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    chain = rng.integers(0, cfg.vocab, 4)
+
+    cache = init_cache(cfg, 1, 64)
+    _, cache, _ = forward(params, cfg, prompt, mode="full", cache=cache)
+    anc = jnp.asarray(np.tril(np.ones((4, 4), bool)))
+    lg_tree, _, _ = forward(
+        params, cfg, jnp.asarray(chain[None], jnp.int32), mode="tree", cache=cache, anc=anc
+    )
+
+    cache2 = init_cache(cfg, 1, 64)
+    _, cache2, _ = forward(params, cfg, prompt, mode="full", cache=cache2)
+    lg_seq, _, _ = forward(params, cfg, jnp.asarray(chain[None], jnp.int32), mode="decode", cache=cache2)
+    np.testing.assert_allclose(np.asarray(lg_tree), np.asarray(lg_seq), atol=1e-4)
+
+
+def test_tree_mode_branch_isolation():
+    """Sibling branches must not attend to each other: the logits of branch A
+    must be identical whatever tokens branch B holds."""
+    cfg = get_smoke("granite-8b").replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    # tree: root(0) -> a(1), root -> b(2): anc masks
+    anc = jnp.asarray(np.array([[1, 0, 0], [1, 1, 0], [1, 0, 1]], bool))
+    base = np.asarray([5, 7, 9], np.int32)
+
+    def run(tok_b):
+        cache = init_cache(cfg, 1, 64)
+        _, cache, _ = forward(params, cfg, prompt, mode="full", cache=cache)
+        toks = base.copy()
+        toks[2] = tok_b
+        lg, _, _ = forward(params, cfg, jnp.asarray(toks[None]), mode="tree", cache=cache, anc=anc)
+        return np.asarray(lg[0, 1])
+
+    np.testing.assert_allclose(run(9), run(123), atol=1e-5)
+
+
+def test_sliding_window_limits_attention():
+    cfg = get_smoke("qwen2-72b").replace(dtype="float32", attention="sliding_window", window=4)
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    toks = np.asarray(rng.integers(0, cfg.vocab, (1, 12)), np.int32)
+    lg1, _, _ = forward(params, cfg, jnp.asarray(toks), mode="full")
+    toks2 = toks.copy()
+    toks2[0, 0] = (toks2[0, 0] + 1) % cfg.vocab  # outside the window of pos 11
+    lg2, _, _ = forward(params, cfg, jnp.asarray(toks2), mode="full")
+    np.testing.assert_allclose(np.asarray(lg1[0, -1]), np.asarray(lg2[0, -1]), atol=1e-5)
+
+
+def test_param_counts_match_assignment_scale():
+    """Full configs should be in the right parameter ballpark."""
+    from repro.configs import get_config
+
+    expect = {
+        "granite-8b": (7e9, 10e9),
+        "qwen2-72b": (65e9, 80e9),
+        "granite-3-2b": (2e9, 4e9),
+        "mamba2-2.7b": (2e9, 3.5e9),
+        "recurrentgemma-2b": (2e9, 3.6e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "llama4-maverick-400b-a17b": (350e9, 450e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

@@ -1,0 +1,134 @@
+"""Unit tests for OTLP solvers (App. B/C/D).
+
+For every solver:
+  * OTLP property (losslessness at a single node): the expectation of the
+    exact conditional output distribution over i.i.d. draft draws equals p.
+  * acceptance formula (App. C) == acceptance computed from output dists.
+  * branching probabilities == output_dist at draft tokens.
+  * the sampling implementation agrees with output_dist (Monte Carlo).
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.otlp import OTLP_SOLVERS, acceptance_rate, branching_probs
+
+SOLVERS = ["nss", "naive", "spectr", "specinfer", "khisti"]
+
+
+def random_pq(rng, V, zeros=False):
+    p = rng.dirichlet(np.ones(V))
+    q = rng.dirichlet(np.ones(V))
+    if zeros:
+        p[rng.integers(V)] = 0
+        q[rng.integers(V)] = 0
+        p /= p.sum()
+        q /= q.sum()
+    return p, q
+
+
+def exact_expectation(solver, p, q, k):
+    """E_{xs ~ q^k}[output_dist(p, q, xs)] by enumeration."""
+    _, output_dist, _ = OTLP_SOLVERS[solver]
+    V = len(p)
+    out = np.zeros(V)
+    for xs in itertools.product(range(V), repeat=k):
+        w = np.prod([q[x] for x in xs])
+        if w > 0:
+            out += w * output_dist(p, q, list(xs))
+    return out
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+@pytest.mark.parametrize("k", [1, 2, 3])
+@pytest.mark.parametrize("zeros", [False, True])
+def test_otlp_property(solver, k, zeros):
+    rng = np.random.default_rng(hash((solver, k, zeros)) % 2**32)
+    for _ in range(3):
+        p, q = random_pq(rng, 4, zeros)
+        np.testing.assert_allclose(exact_expectation(solver, p, q, k), p, atol=1e-10)
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_acceptance_formula(solver, k):
+    rng = np.random.default_rng(hash((solver, k)) % 2**32)
+    _, output_dist, _ = OTLP_SOLVERS[solver]
+    for _ in range(3):
+        p, q = random_pq(rng, 4)
+        # acceptance from exact output dists
+        acc = 0.0
+        for xs in itertools.product(range(4), repeat=k):
+            w = np.prod([q[x] for x in xs])
+            if w > 0:
+                d = output_dist(p, q, list(xs))
+                acc += w * sum(d[x] for x in set(xs))
+        formula = acceptance_rate(solver, p, q, k)
+        if solver == "khisti":
+            assert abs(formula - acc) < 0.08  # Monte-Carlo outer expectation
+        else:
+            np.testing.assert_allclose(formula, acc, atol=1e-9)
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_branching_is_output_dist_at_drafts(solver):
+    rng = np.random.default_rng(0)
+    p, q = random_pq(rng, 5)
+    xs = [0, 2, 2]
+    _, output_dist, _ = OTLP_SOLVERS[solver]
+    d = output_dist(p, q, xs)
+    b = branching_probs(solver, p, q, xs)
+    np.testing.assert_allclose(b, [d[0], d[2], d[2]], atol=1e-12)
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_sampler_matches_output_dist(solver):
+    rng = np.random.default_rng(1)
+    p, q = random_pq(rng, 4)
+    xs = [1, 3]
+    solve, output_dist, _ = OTLP_SOLVERS[solver]
+    d = output_dist(p, q, xs)
+    n = 6000
+    counts = np.zeros(4)
+    for _ in range(n):
+        counts[solve(p, q, xs, rng)] += 1
+    np.testing.assert_allclose(counts / n, d, atol=0.035)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 6),
+    st.integers(1, 3),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from(SOLVERS),
+)
+def test_otlp_property_hypothesis(V, k, seed, solver):
+    """Property: any (p, q, k) keeps the OTLP marginal exactly p."""
+    rng = np.random.default_rng(seed)
+    p, q = random_pq(rng, V)
+    np.testing.assert_allclose(exact_expectation(solver, p, q, k), p, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_spectr_rho_within_bounds(seed, k):
+    from repro.core.otlp import _spectr_rho
+
+    rng = np.random.default_rng(seed)
+    p, q = random_pq(rng, 5)
+    rho = _spectr_rho(p, q, k)
+    assert 1.0 <= rho <= k + 1e-9
+
+
+def test_khisti_importance_dist_valid():
+    from repro.core.otlp import khisti_importance_sample
+
+    rng = np.random.default_rng(2)
+    for k in (1, 2, 4):
+        p, q = random_pq(rng, 6)
+        r = khisti_importance_sample(p, q, k)
+        assert abs(r.sum() - 1) < 1e-12
+        u = 1 - (1 - q) ** k
+        assert np.all(r <= u + 1e-9)

@@ -1,0 +1,55 @@
+"""Sampling warp tests: temperature/nucleus semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.sampling import sample_categorical, warp_logits, warp_probs
+
+
+def test_temperature_zero_is_greedy():
+    logits = jnp.asarray([0.1, 2.0, -1.0])
+    d = warp_logits(logits, 0.0)
+    np.testing.assert_array_equal(np.asarray(d), [0, 1, 0])
+
+
+def test_temperature_scales_entropy():
+    logits = jnp.asarray([1.0, 0.0, -1.0])
+    hot = warp_logits(logits, 2.0)
+    cold = warp_logits(logits, 0.5)
+
+    def H(d):
+        d = np.clip(np.asarray(d), 1e-12, None)
+        return -(d * np.log(d)).sum()
+
+    assert H(hot) > H(cold)
+
+
+def test_nucleus_keeps_threshold_token():
+    probs = jnp.asarray([0.5, 0.3, 0.15, 0.05])
+    out = np.asarray(warp_probs(probs, top_p=0.6))
+    # 0.5 < 0.6 so the second token (crossing the threshold) is kept
+    assert out[0] > 0 and out[1] > 0 and out[2] == 0 and out[3] == 0
+    assert abs(out.sum() - 1) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.999))
+def test_nucleus_mass_and_renorm(seed, top_p):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.ones(8)).astype(np.float32)
+    out = np.asarray(warp_probs(jnp.asarray(p), top_p=top_p))
+    assert abs(out.sum() - 1) < 1e-5
+    kept = out > 0
+    # kept mass under the ORIGINAL distribution covers top_p
+    assert p[kept].sum() >= top_p - 1e-6
+
+
+def test_sample_categorical_distribution():
+    key = jax.random.PRNGKey(0)
+    probs = jnp.asarray([0.7, 0.0, 0.3])
+    keys = jax.random.split(key, 4000)
+    s = jax.vmap(lambda k: sample_categorical(k, probs))(keys)
+    counts = np.bincount(np.asarray(s), minlength=3) / 4000
+    assert counts[1] == 0
+    assert abs(counts[0] - 0.7) < 0.03

@@ -1,0 +1,73 @@
+"""Sharding-rule unit tests (tiny mesh; the production mesh is exercised by
+launch/dryrun.py which this suite does not re-run)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.launch.sharding import _spec_for, batch_shardings, param_shardings
+from repro.models.transformer import init_params
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 4, "model": 8}
+
+
+def test_rule_specs():
+    m = FakeMesh()
+    assert _spec_for("embed", (1024, 512), m) == P("model", "data")
+    assert _spec_for("blocks/attn/wq", (12, 512, 1024), m) == P(None, "data", "model")
+    assert _spec_for("blocks/attn/wo", (12, 1024, 512), m) == P(None, "model", "data")
+    assert _spec_for("blocks/mlp/w_down", (12, 2048, 512), m) == P(None, "model", "data")
+    # MoE 4D expert tensors: experts -> model
+    assert _spec_for("blocks/mlp/w_gate", (12, 16, 512, 128), m) == P(None, "model", "data", None)
+    assert _spec_for("blocks/ln1", (12, 512), m) == P()
+
+
+def test_divisibility_guard_drops_axes():
+    m = FakeMesh()
+    # vocab 49155 not divisible by 8 -> replicated on that dim
+    assert _spec_for("embed", (49155, 512), m) == P(None, "data")
+    assert _spec_for("lm_head", (512, 49155), m) == P("data", None)
+    # odd hidden: both dropped
+    assert _spec_for("blocks/attn/wq", (2, 511, 1023), m) == P(None, None, None)
+
+
+def test_param_shardings_cover_tree():
+    dev = jax.devices()[0]
+    mesh = Mesh(np.asarray([[dev]]), ("data", "model"))
+    cfg = get_smoke("qwen3-moe-235b-a22b")
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    sh = param_shardings(mesh, shapes)
+    n_params = len(jax.tree.leaves(shapes))
+    n_sh = len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
+    assert n_params == n_sh
+
+
+def test_batch_shardings_guard():
+    dev = jax.devices()[0]
+    mesh = Mesh(np.asarray([[dev]]), ("data", "model"))
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((8, 16), np.int32),
+        "labels": jax.ShapeDtypeStruct((8, 16), np.int32),
+    }
+    sh = batch_shardings(mesh, batch)
+    assert all(hasattr(s, "spec") for s in jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+  %ag = bf16[2048,4096]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%sum
+  %fused = f32[16]{0} fusion(%z), kind=kLoop
+  %a2a = bf16[64,32]{1,0} all-to-all(%w)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 2048 * 4096 * 2
+    assert out["all-reduce"] == 128 * 4
+    assert out["all-to-all"] == 64 * 32 * 2
+    assert out["reduce-scatter"] == 0

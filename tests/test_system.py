@@ -1,0 +1,73 @@
+"""System-level behaviour: the paper's qualitative claims reproduced at toy
+scale (these are the EXPERIMENTS.md §claims smoke-level counterparts)."""
+import numpy as np
+import pytest
+
+from repro.core.delayed import estimate_block_efficiency
+from repro.core.enumerate import RandomModel, expected_block_dist, mean_block_len
+from repro.core.traversal import verify_traversal_output_dist
+from repro.core.verify import verify_topdown_output_dist
+
+
+def _avg_block_len(dist_fn, model, K, L1, L2):
+    return mean_block_len(expected_block_dist(dist_fn, model, K, L1, L2))
+
+
+def test_traversal_dominates_root_rollouts():
+    """Paper Sec. 4: under i.i.d. ROOT rollouts (L1=0), Traversal beats the
+    OT methods on average block efficiency."""
+    scores = {"traversal": 0.0, "specinfer": 0.0, "nss": 0.0}
+    for seed in range(4):
+        model = RandomModel(3, seed=100 + seed, divergence=0.6)
+        scores["traversal"] += _avg_block_len(verify_traversal_output_dist, model, 2, 0, 2)
+        for s in ("specinfer", "nss"):
+            scores[s] += _avg_block_len(
+                lambda t, s=s: verify_topdown_output_dist(t, s), model, 2, 0, 2
+            )
+    assert scores["traversal"] > scores["specinfer"] > scores["nss"]
+
+
+def test_delayed_expansion_helps_ot_methods():
+    """Paper Sec. 5: when draft-target divergence jumps past a depth (the
+    Fig. 1 mechanism), moving the branch point to that depth beats root
+    branching even with FEWER tree nodes ("wasteful expansion" of shallow
+    i.i.d. rollouts)."""
+    import zlib
+
+    class DepthDivergingModel(RandomModel):
+        def _dists(self, ctx):
+            if ctx not in self._cache:
+                rng = np.random.default_rng(zlib.crc32(repr(("m", self.seed, ctx)).encode()))
+                p = rng.dirichlet(np.ones(self.vocab))
+                noise = rng.dirichlet(np.ones(self.vocab))
+                w = 0.05 if len(ctx) < 1 else 0.9  # aligned at the root, divergent after
+                q = (1 - w) * p + w * noise
+                self._cache[ctx] = (p, q)
+            return self._cache[ctx]
+
+    gains = 0
+    deltas = []
+    for seed in range(8):
+        model = DepthDivergingModel(3, seed=400 + seed)
+        root = _avg_block_len(
+            lambda t: verify_topdown_output_dist(t, "specinfer"), model, 3, 0, 2
+        )  # 6 nodes, branch at the root
+        delayed = _avg_block_len(
+            lambda t: verify_topdown_output_dist(t, "specinfer"), model, 3, 1, 1
+        )  # 4 nodes, branch where divergence starts
+        deltas.append(delayed - root)
+        gains += delayed > root
+    assert gains >= 6, (gains, deltas)
+    assert np.mean(deltas) > 0, deltas
+
+
+def test_block_efficiency_monotone_in_K():
+    """More i.i.d. branches never hurt expected block efficiency."""
+    model = RandomModel(3, seed=33, divergence=0.7)
+    rng = np.random.default_rng(0)
+    effs = [
+        estimate_block_efficiency(np.random.default_rng(1), model.q, model.p,
+                                  "specinfer", K, 0, 2, s=64)
+        for K in (1, 2, 3)
+    ]
+    assert effs[0] <= effs[1] + 0.05 and effs[1] <= effs[2] + 0.05
