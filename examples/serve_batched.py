@@ -1,0 +1,52 @@
+"""Continuous-batching speculative serving in ~40 lines.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Builds a smoke-scale target/draft pair, submits more requests than the pool
+has slots, and drains them through ``BatchedSpeculativeEngine``: requests
+queue FIFO, join a cache-pool slot when one frees up, and every draft/target
+model call advances all resident streams at once.  Per-stream seeds make
+each output identical to a dedicated single-stream engine run.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.launch.serve import make_draft_cfg
+from repro.models.transformer import init_params
+from repro.serving.batch_engine import BatchedSpeculativeEngine
+from repro.serving.engine import EngineConfig, SamplingParams
+
+
+def main():
+    cfg = get_smoke("granite-8b")
+    dcfg = make_draft_cfg(cfg)
+    tp = init_params(cfg, jax.random.PRNGKey(0))
+    dp = init_params(dcfg, jax.random.PRNGKey(1))
+
+    engine = BatchedSpeculativeEngine(
+        cfg, tp, dcfg, dp,
+        EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=256),
+        SamplingParams(temperature=0.9),
+        n_slots=4,  # 4 resident streams; further requests queue
+    )
+
+    rng = np.random.default_rng(0)
+    rids = [
+        engine.submit(rng.integers(0, cfg.vocab, size=6).tolist(), max_new=24, seed=100 + i)
+        for i in range(6)
+    ]
+    outputs = engine.run()
+    for i, rid in enumerate(rids):
+        print(f"request {i}: {outputs[rid]['tokens'][:12]}...")
+
+    c = engine.counters
+    print(
+        f"\n{len(rids)} requests, {c['blocks']} speculative blocks in "
+        f"{c['target_calls']} batched target calls "
+        f"(block efficiency {c['accepted'] / max(c['blocks'], 1) + 1:.2f})"
+    )
+
+
+if __name__ == "__main__":
+    main()

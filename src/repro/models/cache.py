@@ -2,14 +2,23 @@
 
 Attention caches are ring buffers of size ``Smax`` (= window for
 sliding-window archs): slot = position % Smax, with absolute positions stored
-so masks can express both causality and the sliding window uniformly.  All
-requests in a batch advance in lockstep (the engine pads), so ``len`` and
-``pos`` are shared across the batch.
+so masks can express both causality and the sliding window uniformly.
+
+Two layouts:
+
+  * lockstep (``per_stream=False``): all requests advance together, so
+    ``len`` and ``pos`` are shared across the batch (the training / dryrun
+    shapes, and the single-stream engine).
+  * per-stream (``per_stream=True``): ``len`` is (B,) and ``pos`` is
+    (B, Smax) so every batch row holds an independent stream at its own
+    sequence position.  This is the substrate of the continuous-batching
+    engine: rows join/leave a fixed-capacity pool without recompiles.
 
 Layout (leading layer axis L, scanned):
-    attn:  k, v: (L, B, Smax, Hkv, hd);  pos: (Smax,) int32;  len: () int32
-    ssm:   state: (L, B, H, P, N); conv: (L, B, K-1, C);      len: () int32
-    rglru: state: (L, B, D); conv: (L, B, 3, D);              len: () int32
+    attn:  k, v: (L, B, Smax, Hkv, hd);  pos: (Smax,) or (B, Smax) int32;
+           len: () or (B,) int32
+    ssm:   state: (L, B, H, P, N); conv: (L, B, K-1, C);  len: () or (B,)
+    rglru: state: (L, B, D); conv: (L, B, 3, D);          len: () or (B,)
 """
 from __future__ import annotations
 
@@ -17,36 +26,49 @@ import jax
 import jax.numpy as jnp
 
 
-def init_attn_cache(cfg, n_layers: int, batch: int, smax: int, dtype):
+def init_attn_cache(cfg, n_layers: int, batch: int, smax: int, dtype, per_stream: bool = False):
     hd = cfg.hd
     return {
         "k": jnp.zeros((n_layers, batch, smax, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((n_layers, batch, smax, cfg.n_kv_heads, hd), dtype),
-        "pos": jnp.full((smax,), -1, jnp.int32),
-        "len": jnp.zeros((), jnp.int32),
+        "pos": jnp.full((batch, smax) if per_stream else (smax,), -1, jnp.int32),
+        "len": jnp.zeros((batch,) if per_stream else (), jnp.int32),
     }
 
 
 def cache_slots(length: jax.Array, T: int, smax: int) -> jax.Array:
-    return (length + jnp.arange(T, dtype=jnp.int32)) % smax
+    """(T,) slots for scalar length; (B, T) for per-stream (B,) lengths."""
+    off = jnp.arange(T, dtype=jnp.int32)
+    if getattr(length, "ndim", 0) == 1:
+        return (length[:, None] + off[None, :]) % smax
+    return (length + off) % smax
 
 
 def append_layer_kv(k_cache, v_cache, k_new, v_new, slots):
-    """k_cache: (B, Smax, Hkv, hd); k_new: (B, T, Hkv, hd); slots: (T,)."""
+    """k_cache: (B, Smax, Hkv, hd); k_new: (B, T, Hkv, hd);
+    slots: (T,) shared or (B, T) per stream."""
+    if slots.ndim == 2:
+        b = jnp.arange(k_cache.shape[0])[:, None]
+        return (
+            k_cache.at[b, slots].set(k_new.astype(k_cache.dtype)),
+            v_cache.at[b, slots].set(v_new.astype(v_cache.dtype)),
+        )
     return k_cache.at[:, slots].set(k_new.astype(k_cache.dtype)), v_cache.at[:, slots].set(
         v_new.astype(v_cache.dtype)
     )
 
 
 def attn_mask_from_pos(pos: jax.Array, q_positions: jax.Array, window: int = 0) -> jax.Array:
-    """(T, Smax) mask: slot valid iff 0 <= pos[s] <= q_pos[t] (and within the
-    window when sliding).  q_positions: (T,) absolute positions of queries."""
-    s = pos[None, :]
-    t = q_positions[:, None]
+    """Mask: slot valid iff 0 <= pos[s] <= q_pos[t] (and within the window
+    when sliding).  pos: (Smax,) or (B, Smax); q_positions: (T,) or (B, T)
+    absolute positions of queries.  Returns (1, 1, T, Smax) or
+    (B, 1, T, Smax)."""
+    s = pos[..., None, :]
+    t = q_positions[..., :, None]
     m = (s >= 0) & (s <= t)
     if window:
         m = m & (s > t - window)
-    return m[None, None]  # (1, 1, T, Smax)
+    return m[:, None] if m.ndim == 3 else m[None, None]
 
 
 def tree_mask_from_pos(
@@ -56,14 +78,27 @@ def tree_mask_from_pos(
 
     The T tree tokens were appended into ``self_slots``; a tree token may
     attend to (a) any older cache slot per the causal/window rule against the
-    *branch-context* boundary, and (b) its tree ancestors (anc, (T, T),
-    including self).
+    *branch-context* boundary, and (b) its tree ancestors (anc, (T, T) or
+    per-stream (B, T, T), including self).
     """
+    if pos.ndim == 2:  # per-stream tables: pos (B, Smax), self_slots (B, T)
+        B, T = self_slots.shape
+        base = attn_mask_from_pos(pos, q_positions, window)[:, 0]  # (B, T, Smax)
+        bidx = jnp.arange(B)[:, None]
+        is_self = jnp.zeros(pos.shape, bool).at[bidx, self_slots].set(True)  # (B, Smax)
+        base = base & ~is_self[:, None, :]
+        anc_b = anc if anc.ndim == 3 else jnp.broadcast_to(anc[None], (B, T, T))
+        tree_part = (
+            jnp.zeros(base.shape, bool)
+            .at[bidx[:, :, None], jnp.arange(T)[None, :, None], self_slots[:, None, :]]
+            .set(anc_b.astype(bool))
+        )
+        return (base | tree_part)[:, None]  # (B, 1, T, Smax)
     base = attn_mask_from_pos(pos, q_positions, window)[0, 0]  # (T, Smax)
     # cut out the tree's own slots from the causal rule, then re-add ancestors
     is_self = jnp.zeros(pos.shape, bool).at[self_slots].set(True)  # (Smax,)
     base = base & ~is_self[None, :]
-    if anc.ndim == 3:  # batched ancestor masks (B, T, T)
+    if anc.ndim == 3:  # batched ancestor masks (B, T, T), shared slot table
         tree_part = (
             jnp.zeros((anc.shape[0],) + base.shape, bool)
             .at[:, :, self_slots]
@@ -72,3 +107,114 @@ def tree_mask_from_pos(
         return (base[None] | tree_part)[:, None]  # (B, 1, T, Smax)
     tree_part = jnp.zeros(base.shape, bool).at[:, self_slots].set(anc.astype(bool))
     return (base | tree_part)[None, None]  # (1, 1, T, Smax)
+
+
+# ---------------------------------------------------------- stream algebra ---
+#
+# Every cache array has at most one "stream" axis (the batch axis).  Its
+# position depends on the array family; the walker below encodes that map
+# once so fork/gather/scatter/merge work for every architecture.
+
+_AXIS1 = ("state", "conv", "tail_state", "tail_conv", "cross_k", "cross_v")
+
+
+def _walk(cache, other, fn):
+    """Apply fn(dst, src, axis) over the cache pytree; axis None for arrays
+    without a stream axis (lockstep pos/len)."""
+    out = {}
+    for key, val in cache.items():
+        o = other[key] if other is not None else None
+        if key == "attn":
+            a = {}
+            a["k"] = fn(val["k"], o["k"] if o else None, 1)
+            a["v"] = fn(val["v"], o["v"] if o else None, 1)
+            a["pos"] = fn(val["pos"], o["pos"] if o else None, 0 if val["pos"].ndim == 2 else None)
+            a["len"] = fn(val["len"], o["len"] if o else None, 0 if val["len"].ndim == 1 else None)
+            out[key] = a
+        elif key in ("rec_state", "rec_conv"):
+            out[key] = fn(val, o, 2)
+        elif key in _AXIS1:
+            out[key] = fn(val, o, 1)
+        elif key == "len":
+            out[key] = fn(val, o, 0 if val.ndim == 1 else None)
+        else:
+            out[key] = fn(val, o, None)
+    return out
+
+
+def fork_streams(cache: dict, K: int) -> dict:
+    """Replicate every stream row K times along its stream axis (row b maps
+    to rows b*K .. b*K+K-1).  Lockstep pos/len are shared, not replicated."""
+    return _walk(cache, None, lambda a, _, ax: a if ax is None else jnp.repeat(a, K, axis=ax))
+
+
+def gather_streams(cache: dict, rows) -> dict:
+    """Select stream rows (a smaller cache over ``rows``, in order)."""
+    rows = jnp.asarray(rows)
+    return _walk(cache, None, lambda a, _, ax: a if ax is None else jnp.take(a, rows, axis=ax))
+
+
+def scatter_streams(pool: dict, rows_cache: dict, slots) -> dict:
+    """Write ``rows_cache`` stream rows into ``pool`` at ``slots`` (list of
+    pool row indices, one per rows_cache row)."""
+    slots = jnp.asarray(slots)
+
+    def put(dst, src, ax):
+        if ax is None:
+            return dst
+        dst_m = jnp.moveaxis(dst, ax, 0)
+        src_m = jnp.moveaxis(src, ax, 0).astype(dst_m.dtype)
+        return jnp.moveaxis(dst_m.at[slots].set(src_m), 0, ax)
+
+    return _walk(pool, rows_cache, put)
+
+
+def merge_streams(new: dict, old: dict, keep) -> dict:
+    """Per-stream select: row b of the result is ``new``'s where keep[b],
+    else ``old``'s.  The freeze primitive of padded lockstep stepping: rows
+    whose stream has no real token this step keep their exact prior state."""
+    keep = jnp.asarray(keep)
+
+    def sel(n, o, ax):
+        if ax is None:
+            return n
+        shape = [1] * n.ndim
+        shape[ax] = keep.shape[0]
+        return jnp.where(keep.reshape(shape), n, o)
+
+    return _walk(new, old, sel)
+
+
+class CachePool:
+    """Fixed-capacity slot pool over a per-stream cache.
+
+    Holds one batched cache of ``n_slots`` rows plus free-slot bookkeeping so
+    streams can join (prefill a 1-row cache, scatter it in) and leave
+    (release the slot) without any recompilation: every model call sees the
+    same (n_slots, ...) shapes.
+    """
+
+    def __init__(self, cache: dict, n_slots: int):
+        self.cache = cache
+        self.n_slots = n_slots
+        self._free = list(range(n_slots))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise RuntimeError("cache pool exhausted")
+        return self._free.pop(0)
+
+    def release(self, slot: int) -> None:
+        assert slot not in self._free
+        self._free.append(slot)
+        self._free.sort()
+
+    def admit(self, row_cache: dict) -> int:
+        """Scatter a freshly prefilled 1-row per-stream cache into a free slot."""
+        slot = self.acquire()
+        self.cache = scatter_streams(self.cache, row_cache, [slot])
+        return slot

@@ -39,7 +39,8 @@ class ModelConfig:
     attention_impl: str = "xla"
     kernel_interpret: bool = True
 
-    # MoE
+    # MoE — inference routing is dropless (exactness; see models/moe.py);
+    # capacity_factor bounds the training dispatch buffers only
     n_experts: int = 0
     top_k: int = 0
     capacity_factor: float = 1.25

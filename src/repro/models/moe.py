@@ -1,4 +1,4 @@
-"""Mixture-of-Experts layer with sort-free capacity dispatch.
+"""Mixture-of-Experts layer with sort-free dropless dispatch.
 
 TPU-native formulation: tokens are scattered into per-expert capacity buffers
 (E, C, D) via computed slot indices (rank-within-expert by cumulative count),
@@ -6,8 +6,23 @@ expert FFNs run as one batched einsum (E, C, D) x (E, D, F), and outputs are
 gathered back with router-probability weighting.  Under a mesh that shards
 tokens on the data axis and experts on the model axis, XLA SPMD lowers the
 scatter/gather pair to all-to-all collectives — the communication pattern of
-expert parallelism.  Overflow beyond capacity is dropped (standard
-capacity-factor semantics); an auxiliary load-balancing loss is returned.
+expert parallelism.
+
+Inference routing is DROPLESS (Qwen3-MoE style): the per-expert buffer is
+sized for the worst-case load, so no (token, choice) is ever dropped.  This
+is a correctness requirement, not a tuning choice — capacity-factor dropping
+makes a token's output depend on which other tokens share its batch, which
+breaks (a) decode/full consistency (the qwen3 decode-consistency failure:
+max-logit err ~1.16 came from the last token overflowing a full-pass
+capacity buffer it never overflows in a 1-token decode) and (b) the
+batch-invariance the batched speculative engine relies on for lossless
+multi-stream serving.
+
+Training (``train=True``, set by ``loss_fn``) keeps the standard
+capacity-factor dispatch: the worst-case buffer would multiply expert-FFN
+compute/memory by ~E/(top_k * capacity_factor) at train_4k scale, and drop
+semantics there are a regularisation choice, not a correctness issue.  An
+auxiliary load-balancing loss is returned either way.
 """
 from __future__ import annotations
 
@@ -30,17 +45,26 @@ def init_moe(cfg, key):
     }
 
 
-def moe_capacity(n_tokens: int, cfg) -> int:
-    c = int(np.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
-    return max(8, int(np.ceil(c / 8) * 8))  # pad to an 8-multiple for TPU tiling
+def moe_capacity(n_tokens: int, cfg, train: bool = False) -> int:
+    """Per-expert buffer size, padded to an 8-multiple for TPU tiling.
+
+    Inference: dropless — top_k experts of one token are distinct, so the
+    worst-case load on any single expert is n_tokens.
+    Training: standard capacity-factor bound (overflow is dropped)."""
+    if train and cfg.capacity_factor > 0:
+        c = int(np.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    else:
+        c = n_tokens
+    return max(8, int(np.ceil(c / 8) * 8))
 
 
-def moe_apply(p, cfg, x: jax.Array):
+def moe_apply(p, cfg, x: jax.Array, train: bool = False):
     """x: (B, S, D) -> (B, S, D), aux_loss (scalar)."""
     B, S, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
     N = B * S
-    C = moe_capacity(N, cfg)
+    C = moe_capacity(N, cfg, train)
+    drops = train and cfg.capacity_factor > 0
     xf = x.reshape(N, D)
 
     logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (N, E)
@@ -66,10 +90,13 @@ def moe_apply(p, cfg, x: jax.Array):
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1]])
     rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[flat_e[order]]
     slot = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
-    keep = slot < C
-    flat_idx = jnp.where(keep, flat_e * C + slot, E * C)  # E*C = drop bin
+    if drops:
+        flat_idx = jnp.where(slot < C, flat_e * C + slot, E * C)  # E*C = drop bin
+    else:
+        # dropless: rank-within-expert < per-expert load <= N <= C, in range
+        flat_idx = flat_e * C + slot
 
-    # dispatch: (E*C + 1, D) buffers.
+    # dispatch: (E*C (+1 drop-bin row when training), D) buffers.
     # NOTE (§Perf cycle 5, REFUTED): constraining this buffer to 2D
     # (experts -> model, capacity -> data) via act_sharding.pin_moe_buffer
     # made both the memory and collective terms ~2x WORSE at train_4k —
@@ -77,7 +104,7 @@ def moe_apply(p, cfg, x: jax.Array):
     # reshard.  XLA's own placement (experts -> model from the weight specs,
     # capacity unsharded) is the better schedule; left as measured.
     src = jnp.repeat(xf, k, axis=0)  # (N*k, D)
-    buf = jnp.zeros((E * C + 1, D), x.dtype).at[flat_idx].add(src)
+    buf = jnp.zeros((E * C + drops, D), x.dtype).at[flat_idx].add(src)
     buf = buf[: E * C].reshape(E, C, D)
 
     # expert FFN: batched SwiGLU
@@ -85,10 +112,11 @@ def moe_apply(p, cfg, x: jax.Array):
         "ecd,edf->ecf", buf, p["w_up"]
     )
     out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
-    out_buf = jnp.concatenate([out_buf, jnp.zeros((1, D), out_buf.dtype)], axis=0)
+    if drops:
+        out_buf = jnp.concatenate([out_buf, jnp.zeros((1, D), out_buf.dtype)], axis=0)
 
     # combine: gather each (token, choice) result and weight by the gate
-    gathered = out_buf[flat_idx]  # (N*k, D) — dropped tokens hit the zero row
+    gathered = out_buf[flat_idx]  # (N*k, D) — dropped training tokens hit the zero row
     weighted = gathered * top_p.reshape(-1)[:, None].astype(gathered.dtype)
     y = jnp.sum(weighted.reshape(N, k, D), axis=1)
     return y.reshape(B, S, D), aux

@@ -172,7 +172,8 @@ def _self_attention(p, cfg, x, positions, mask, layer_cache, window):
     return x + att.reshape(B, T, -1) @ p["attn"]["wo"], new_kv
 
 
-def _attn_mlp_block(p, cfg, x, positions, mask, layer_cache, window, moe=False, enc_kv=None):
+def _attn_mlp_block(p, cfg, x, positions, mask, layer_cache, window, moe=False, enc_kv=None,
+                    train=False):
     x = pin(x)
     x, new_kv = _self_attention(p, cfg, x, positions, mask, layer_cache, window)
     aux = jnp.zeros((), jnp.float32)
@@ -185,7 +186,7 @@ def _attn_mlp_block(p, cfg, x, positions, mask, layer_cache, window, moe=False, 
         x = x + att.reshape(B, T, -1) @ p["xattn"]["wo"]
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     if moe:
-        y, aux = moe_apply(p["mlp"], cfg, h)
+        y, aux = moe_apply(p["mlp"], cfg, h, train=train)
     else:
         y = swiglu(p["mlp"], h)
     return x + y, new_kv, aux
@@ -253,6 +254,8 @@ def forward(
     anc: jax.Array | None = None,
     embeds: jax.Array | None = None,
     enc_embeds: jax.Array | None = None,
+    lens: jax.Array | None = None,
+    train: bool = False,
 ):
     """Returns (logits, new_cache, aux).
 
@@ -263,6 +266,18 @@ def forward(
     embeds:        pre-computed modality embeddings — VLM patches (prepended
                    at "full" time) or a direct replacement for token embeds.
     enc_embeds:    encoder-side frame embeddings (encdec only).
+    lens:          per-stream real-token counts (B,) for *padded* cached
+                   passes over a per-stream cache (see models/cache.py):
+                   row b's tokens beyond lens[b] are padding — their cache
+                   slots are written but marked invalid (pos = -1) and the
+                   row's length advances by lens[b] only, so the next append
+                   overwrites them.  Requires a per-stream cache.  Note this
+                   masks *attention state only*; recurrent (ssm/rglru) state
+                   integrates every token, so recurrent-arch callers must
+                   keep padded rows frozen via cache.merge_streams instead.
+    train:         training semantics (set by loss_fn): MoE uses the bounded
+                   capacity-factor dispatch instead of the exact dropless
+                   one (see models/moe.py).
     """
     dt = cfg.jdtype
     if tokens is not None:
@@ -277,7 +292,12 @@ def forward(
     length = cache["attn"]["len"] if (cache is not None and "attn" in cache) else (
         cache["len"] if cache is not None else jnp.zeros((), jnp.int32)
     )
-    positions = length + (jnp.arange(T, dtype=jnp.int32) if anc is None else _tree_depths(anc))
+    per_stream = getattr(length, "ndim", 0) == 1
+    offs = jnp.arange(T, dtype=jnp.int32) if anc is None else _tree_depths(anc, per_stream)
+    if per_stream:
+        positions = length[:, None] + (offs if offs.ndim == 2 else offs[None, :])
+    else:
+        positions = length + offs
     aux_total = jnp.zeros((), jnp.float32)
 
     # ---------------- encoder (encdec) ----------------
@@ -317,8 +337,16 @@ def forward(
         if use_cache and "attn" in cache:
             smax = cache["attn"]["k"].shape[2]
             slots = cache_slots(length, T, smax)
-            new_pos = cache["attn"]["pos"].at[slots].set(positions)
-            new_len = length + T
+            pos_vals = positions
+            if lens is not None:
+                valid = jnp.arange(T, dtype=jnp.int32)[None, :] < lens[:, None]
+                pos_vals = jnp.where(valid, positions, -1)
+            if per_stream:
+                bidx = jnp.arange(slots.shape[0])[:, None]
+                new_pos = cache["attn"]["pos"].at[bidx, slots].set(pos_vals)
+            else:
+                new_pos = cache["attn"]["pos"].at[slots].set(pos_vals)
+            new_len = length + (T if lens is None else lens)
             mask_full, mask_local = _mk_masks(cfg, mode, T, new_pos, positions, anc, slots)
         else:
             mask_full, mask_local = _mk_masks(cfg, "full", T, None, None, None, None)
@@ -347,7 +375,7 @@ def forward(
                     vs_.append(kv[1])
             layer_cache = (lc[0][m - 1], lc[1][m - 1], slots) if lc is not None else None
             h, kv, aux = _attn_mlp_block(
-                pl["moe"], cfg, h, positions, mask_full, layer_cache, 0, moe=True
+                pl["moe"], cfg, h, positions, mask_full, layer_cache, 0, moe=True, train=train
             )
             if kv is not None:
                 ks_.append(kv[0])
@@ -384,7 +412,8 @@ def forward(
                 ekv = None
             layer_cache = (lc[0], lc[1], slots) if lc is not None else None
             h, new_kv, aux = _attn_mlp_block(
-                pl, cfg, h, positions, mask_full, layer_cache, 0, moe=moe, enc_kv=ekv
+                pl, cfg, h, positions, mask_full, layer_cache, 0, moe=moe, enc_kv=ekv,
+                train=train,
             )
             return h, (new_kv, aux)
 
@@ -411,7 +440,8 @@ def forward(
                 else:
                     pl, ekv = per, None
                 h, _, aux = _attn_mlp_block(
-                    pl, cfg, h, positions, mask_full, None, 0, moe=moe, enc_kv=ekv
+                    pl, cfg, h, positions, mask_full, None, 0, moe=moe, enc_kv=ekv,
+                    train=train,
                 )
                 return h, aux
 
@@ -439,7 +469,7 @@ def forward(
                 return h + y, (nc["state"], nc["conv"])
 
             x, (sts, cvs) = scan(body_c, x, (params["blocks"], cache["state"], cache["conv"]))
-            new_cache.update({"state": sts, "conv": cvs, "len": length + T})
+            new_cache.update({"state": sts, "conv": cvs, "len": length + (T if lens is None else lens)})
         else:
             def body_nc(h, pl):
                 h = pin(h)
@@ -506,7 +536,7 @@ def forward(
             else:
                 x, _ = scan(ckpt(tail_nc), x, params["tail"])
         if use_cache:
-            new_cache["len"] = length + T
+            new_cache["len"] = length + (T if lens is None else lens)
     else:
         raise ValueError(cfg.arch_type)
 
@@ -516,8 +546,13 @@ def forward(
     return logits, new_cache, {"aux": aux_total, "hidden": x}
 
 
-def _tree_depths(anc: jax.Array) -> jax.Array:
-    """Positions offset of tree tokens = (ancestor count - 1)."""
+def _tree_depths(anc: jax.Array, per_stream: bool = False) -> jax.Array:
+    """Positions offset of tree tokens = (ancestor count - 1).
+
+    Lockstep caches treat a (B, T, T) anc as sharing one topology (depths
+    from row 0); per-stream caches get per-row depths (B, T)."""
+    if anc.ndim == 3 and per_stream:
+        return jnp.sum(anc.astype(jnp.int32), axis=-1) - 1
     a = anc if anc.ndim == 2 else anc[0]
     return jnp.sum(a.astype(jnp.int32), axis=-1) - 1
 
@@ -525,17 +560,19 @@ def _tree_depths(anc: jax.Array) -> jax.Array:
 # ------------------------------------------------------------------ cache ----
 
 
-def init_cache(cfg, batch: int, smax: int, enc_len: int | None = None) -> dict:
+def init_cache(cfg, batch: int, smax: int, enc_len: int | None = None, per_stream: bool = False) -> dict:
     """Empty decode cache for every architecture family.
 
     smax: attention cache capacity (== window for sliding-window archs; the
     ring buffer makes longer logical contexts fit in window slots).
+    per_stream: per-row pos/len tables so batch rows hold independent streams
+    (the continuous-batching layout; see models/cache.py).
     """
     dt = cfg.jdtype
     hd = cfg.hd
-    cache: dict = {"len": jnp.zeros((), jnp.int32)}
+    cache: dict = {"len": jnp.zeros((batch,) if per_stream else (), jnp.int32)}
     if cfg.arch_type in ("dense", "vlm", "moe", "encdec"):
-        c = init_attn_cache(cfg, cfg.n_layers, batch, smax, dt)
+        c = init_attn_cache(cfg, cfg.n_layers, batch, smax, dt, per_stream=per_stream)
         cache["attn"] = c
         del cache["len"]
         if cfg.arch_type == "encdec":
@@ -553,7 +590,7 @@ def init_cache(cfg, batch: int, smax: int, enc_len: int | None = None) -> dict:
         dl = cfg.lru_d
         cache["rec_state"] = jnp.zeros((n_groups, g - 1, batch, dl), jnp.float32)
         cache["rec_conv"] = jnp.zeros((n_groups, g - 1, batch, 3, dl), dt)
-        cache["attn"] = init_attn_cache(cfg, n_groups, batch, smax, dt)
+        cache["attn"] = init_attn_cache(cfg, n_groups, batch, smax, dt, per_stream=per_stream)
         if rem:
             cache["tail_state"] = jnp.zeros((rem, batch, dl), jnp.float32)
             cache["tail_conv"] = jnp.zeros((rem, batch, 3, dl), dt)
@@ -572,7 +609,7 @@ def cache_length(cfg, cache) -> jax.Array:
 def loss_fn(params, cfg, tokens: jax.Array, labels: jax.Array, embeds=None, enc_embeds=None):
     """Next-token cross-entropy (+ MoE aux).  labels < 0 are masked."""
     logits, _, extras = forward(
-        params, cfg, tokens, mode="full", embeds=embeds, enc_embeds=enc_embeds
+        params, cfg, tokens, mode="full", embeds=embeds, enc_embeds=enc_embeds, train=True
     )
     aux = extras["aux"]
     if cfg.arch_type == "vlm" and embeds is not None:

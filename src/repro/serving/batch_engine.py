@@ -1,0 +1,646 @@
+"""Continuous-batching speculative engine: N concurrent streams per model call.
+
+``SpeculativeEngine`` (serving/engine.py) advances one stream per target /
+draft call, so multi-user throughput is bounded by single-stream latency.
+This module packs every active stream into lockstep batched calls — per
+iteration one padded draft-ingest pass, one padded draft step per tree level,
+ONE padded tree-masked target pass — with per-stream host verification, so
+aggregate tokens/sec scales with the number of streams while each stream's
+output remains exactly the warped target process.
+
+Substrate (models/cache.py): a slot-based per-stream KV pool.  Every model
+call sees the same (n_slots, ...) shapes, so streams join (prefill a 1-row
+cache, scatter it into a free slot) and leave (release the slot) without
+recompiles.  Speculation shapes are BUCKETED: per-iteration (K, L1, L2) are
+padded to the next power of two, so the jit cache stays bounded even under
+heterogeneous per-stream NDE selector decisions.
+
+Exactness contract (property-tested in tests/test_batch_engine.py): with the
+same per-stream seed, the batched engine emits token-identical output to an
+independent ``SpeculativeEngine`` run per stream.  This leans on three facts:
+
+  * attention/MoE/MLP compute is per-row and per-query: padding extra rows
+    (idle slots) or extra query tokens (masked via ``lens`` / the ancestor
+    mask) contributes exact zeros to softmax sums, so logits are bit-equal
+    to the unpadded single-stream call (verified: dense/ssm/hybrid logits
+    are invariant to batch size on the XLA CPU/TPU paths);
+  * MoE routing is dropless (models/moe.py), so expert outputs do not
+    depend on batch co-tokens;
+  * recurrent (ssm/rglru) state integrates *every* processed token and the
+    chunked SSD scan is not bitwise-stable under length padding, so
+    recurrent-arch multi-token calls are grouped by exact length (same T as
+    the single engine) instead of padded, and T=1 lockstep steps are frozen
+    per-row with ``merge_streams``.
+
+Scheduling: admission is FIFO (``submit`` queues, free slots admit); a stream
+is evicted (finished early) when its context can no longer fit a speculation
+block in its cache ring.  ``launch/serve.py --streams N`` drives this engine.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.traversal import delayed_structure
+from repro.core.trees import DraftTree, tree_ancestor_mask
+from repro.models.cache import (
+    CachePool,
+    fork_streams,
+    gather_streams,
+    merge_streams,
+    scatter_streams,
+)
+from repro.models.transformer import forward, init_cache
+from repro.sampling import warp_logits
+from repro.serving.engine import (
+    EngineConfig,
+    SamplingParams,
+    SpeculativeEngine,
+    draw_token,
+    verify_tree,
+)
+from repro.serving.serve_step import (
+    make_pool_decode_step,
+    make_pool_locked_step,
+    make_pool_tree_step,
+)
+
+RECURRENT = ("ssm", "hybrid")
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass
+class BatchRequest:
+    rid: int
+    prompt: list
+    max_new: int
+    seed: int
+
+
+class BatchedSpeculativeEngine:
+    """Multi-stream speculative decoding over a slot-based cache pool.
+
+    API:  ``submit(prompt, max_new, seed) -> rid``; ``step()`` advances every
+    active stream one speculative block (admitting queued requests first) and
+    returns per-request progress; ``run()`` drains the queue and returns
+    ``{rid: tokens}``.
+    """
+
+    def __init__(self, target_cfg, target_params, draft_cfg, draft_params,
+                 ecfg: EngineConfig, sampling: SamplingParams | None = None,
+                 selector=None, n_slots: int = 4):
+        assert target_cfg.vocab == draft_cfg.vocab
+        assert n_slots >= 1, f"need at least one pool slot, got {n_slots}"
+        assert target_cfg.arch_type not in ("encdec", "vlm"), \
+            "batched serving covers decoder-only archs (encdec/vlm prefill kwargs are single-stream)"
+        assert not ecfg.verify_on_device, \
+            "batched serving verifies per-stream on host (verify_on_device consumes " \
+            "randomness differently and would break batch-vs-single exactness)"
+        # selectors must be pure functions of stream state (NeuralSelector,
+        # StaticSelector); AnalyticSelector's peek_* oracle API is
+        # single-stream only
+        assert type(selector).__name__ != "AnalyticSelector", \
+            "AnalyticSelector needs the single-stream peek_draft/target_dist oracles"
+        self.tc, self.tp = target_cfg, target_params
+        self.dc, self.dp = draft_cfg, draft_params
+        self.ecfg = ecfg
+        self.sampling = sampling or SamplingParams()
+        self.selector = selector
+        self.n_slots = n_slots
+        self.strategy = "replay" if target_cfg.arch_type in RECURRENT else "tree"
+        smax = ecfg.max_cache
+        self.tpool = CachePool(init_cache(target_cfg, n_slots, smax, per_stream=True), n_slots)
+        self.dpool = CachePool(init_cache(draft_cfg, n_slots, smax, per_stream=True), n_slots)
+        self.streams: dict[int, dict] = {}  # slot -> stream state
+        self.queue: list[BatchRequest] = []
+        self.finished: dict[int, dict] = {}
+        self._next_rid = 0
+        self._jit_cache: dict = {}
+        self.counters = {"target_calls": 0, "target_tokens": 0, "draft_calls": 0,
+                         "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0}
+
+    # ------------------------------------------------------------- helpers ---
+
+    def _jit(self, name, fn):
+        if name not in self._jit_cache:
+            self._jit_cache[name] = jax.jit(fn)
+        return self._jit_cache[name]
+
+    def _warp(self, logits):
+        return warp_logits(logits, self.sampling.temperature, self.sampling.top_p)
+
+    def _recurrent(self, cfg) -> bool:
+        return cfg.arch_type in RECURRENT
+
+    @staticmethod
+    def _pad_group(rows: list[int], toks: np.ndarray, width: int):
+        """Pad a row group to a fixed width by repeating its first row, so
+        grouped recurrent calls compile once per token-length instead of
+        once per (length, group-size).  Pad rows process row 0's tokens and
+        scatter row 0's (identical) result again — bitwise harmless."""
+        pad = width - len(rows)
+        rows_p = rows + [rows[0]] * pad
+        toks_p = np.concatenate([toks, np.repeat(toks[:1], pad, axis=0)]) if pad else toks
+        return rows_p, toks_p
+
+    # ------------------------------------------------------------ requests ---
+
+    def submit(self, prompt: list[int], max_new: int = 64, seed: int | None = None) -> int:
+        """Queue a request; it is admitted when a pool slot frees up.
+        ``seed`` drives this stream's drafting/verification randomness — a
+        single-stream ``SpeculativeEngine`` with ``EngineConfig(seed=seed)``
+        emits the identical token sequence."""
+        if not 1 <= len(prompt) < self.ecfg.max_cache:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot fit a {self.ecfg.max_cache}-slot cache ring"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(BatchRequest(rid, list(prompt), max_new,
+                                       self.ecfg.seed if seed is None else seed))
+        return rid
+
+    def _prefill_row(self, cfg, params, ctx, name: str):
+        """Prefill a fresh 1-row per-stream cache with ``ctx`` tokens."""
+        row = init_cache(cfg, 1, self.ecfg.max_cache, per_stream=True)
+        if not ctx:
+            return row, None
+        T = len(ctx)
+        if self._recurrent(cfg):
+            fn = self._jit(f"{name}_prefill_{T}", partial(forward, cfg=cfg, mode="full"))
+            _, row, ex = fn(params, tokens=jnp.asarray(np.asarray(ctx, np.int32)[None]), cache=row)
+            return row, np.asarray(ex["hidden"][0, T - 1])
+        # bucket the pad, but never past the ring: a padded pass longer than
+        # smax would wrap and overwrite the committed prefix it just wrote
+        Tp = min(_next_pow2(T), self.ecfg.max_cache)
+        toks = np.zeros((1, Tp), np.int32)
+        toks[0, :T] = ctx
+        fn = self._jit(f"{name}_prefill_p{Tp}", partial(forward, cfg=cfg, mode="full"))
+        _, row, ex = fn(params, tokens=jnp.asarray(toks), cache=row,
+                        lens=jnp.asarray([T], jnp.int32))
+        return row, np.asarray(ex["hidden"][0, T - 1])
+
+    def _admit(self):
+        while self.queue and self.tpool.free_slots:
+            req = self.queue.pop(0)
+            ctx = req.prompt[:-1]
+            trow, h_p = self._prefill_row(self.tc, self.tp, ctx, "tgt")
+            drow, h_q = self._prefill_row(self.dc, self.dp, ctx, "drf")
+            slot = self.tpool.admit(trow)
+            slot_d = self.dpool.admit(drow)
+            assert slot == slot_d
+            self.streams[slot] = {
+                "rid": req.rid,
+                "rng": np.random.default_rng(req.seed),
+                "max_new": req.max_new,
+                "out": [],
+                "committed": list(req.prompt),
+                "pending": int(req.prompt[-1]),
+                "draft_delta": [int(req.prompt[-1])],
+                "h_prev_p": h_p if h_p is not None else np.zeros(self.tc.d_model, np.float32),
+                "h_prev_q": h_q if h_q is not None else np.zeros(self.dc.d_model, np.float32),
+                "p_prev": None,
+                "q_prev": None,
+                "done": False,
+            }
+
+    def _finish(self, slot: int, reason: str = "length"):
+        st = self.streams.pop(slot)
+        self.finished[st["rid"]] = {"tokens": st["out"][: st["max_new"]], "reason": reason}
+        self.tpool.release(slot)
+        self.dpool.release(slot)
+
+    def choose_action(self, stream):
+        if self.selector is None:
+            return self.ecfg.K, self.ecfg.L1, self.ecfg.L2
+        return self.selector(stream, self)
+
+    # ------------------------------------------------------------ drafting ---
+
+    def _ingest_deltas(self, active):
+        """Advance the draft pool over each stream's newly committed tokens.
+        Returns per-slot (q0 dist, draft hidden at the new root)."""
+        q0, hq = {}, {}
+        if self._recurrent(self.dc):
+            groups = defaultdict(list)
+            for s in active:
+                groups[len(self.streams[s]["draft_delta"])].append(s)
+            for L, rows in sorted(groups.items()):
+                toks = np.asarray([self.streams[s]["draft_delta"] for s in rows], np.int32)
+                rows_p, toks_p = self._pad_group(rows, toks, self.n_slots)
+                sub = gather_streams(self.dpool.cache, rows_p)
+                fn = self._jit(f"drf_ing_g{L}", partial(forward, cfg=self.dc, mode="decode"))
+                logits, sub, ex = fn(self.dp, tokens=jnp.asarray(toks_p), cache=sub)
+                self.dpool.cache = scatter_streams(self.dpool.cache, sub, rows_p)
+                w = np.asarray(self._warp(logits))
+                hid = np.asarray(ex["hidden"])
+                for i, s in enumerate(rows):
+                    q0[s] = w[i, L - 1]
+                    hq[s] = hid[i, L - 1]
+                self.counters["draft_calls"] += 1
+                self.counters["draft_tokens"] += L * len(rows)
+        else:
+            Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
+            toks = np.zeros((self.n_slots, Dp), np.int32)
+            lens = np.zeros((self.n_slots,), np.int32)
+            for s in active:
+                d = self.streams[s]["draft_delta"]
+                toks[s, : len(d)] = d
+                lens[s] = len(d)
+            fn = self._jit(f"drf_ing_p{Dp}", make_pool_decode_step(self.dc))
+            logits, cache, hidden = fn(self.dp, self.dpool.cache, jnp.asarray(toks),
+                                       jnp.asarray(lens))
+            self.dpool.cache = cache
+            w = np.asarray(self._warp(logits))
+            hid = np.asarray(hidden)
+            for s in active:
+                q0[s] = w[s, lens[s] - 1]
+                hq[s] = hid[s, lens[s] - 1]
+            self.counters["draft_calls"] += 1
+            self.counters["draft_tokens"] += int(lens.sum())
+        return q0, hq
+
+    @staticmethod
+    def _bucket_actions(acts) -> tuple[int, int, int, int]:
+        """Pad the batch's (K, L1, L2) actions to power-of-two buckets.
+
+        The single source of truth for the iteration's static shapes: the
+        drafting passes, the tree pass (Tpad) and step()'s eviction bound
+        all use these same component-wise maxima."""
+        Km = max(a[0] for a in acts.values())
+        L1m = max(a[1] for a in acts.values())
+        L2m = max(a[2] for a in acts.values())
+        L1p = _next_pow2(L1m) if L1m else 0
+        L2p = _next_pow2(L2m) if L2m else 0
+        Kp = _next_pow2(Km) if (L2p and Km) else 0
+        return Kp, L1p, L2p, 1 + L1p + Kp * L2p
+
+    def _draft_trees(self, active, acts, q0, pads):
+        """Lockstep-draft every stream's (K, L1, L2) delayed tree on a local
+        copy of the draft pool (discarded after, like the single engine)."""
+        Kp, L1p, L2p, Tpad = pads
+        # loop trip counts are host-side, not compiled shapes: iterate to the
+        # raw batch maxima (the bucketed L1p/L2p only size the tree pass)
+        L1m = max(a[1] for a in acts.values())
+        L2m = max(a[2] for a in acts.values())
+        dwork = self.dpool.cache
+        cur = dict(q0)
+        trunk_tok = {s: [] for s in active}
+        trunk_q = {s: [] for s in active}
+        step_fn = self._jit("drf_step", make_pool_locked_step(self.dc))
+        for j in range(L1m):
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            keep = np.zeros((self.n_slots,), bool)
+            n_live = 0
+            for s in active:
+                if j < acts[s][1]:
+                    t = draw_token(self.streams[s]["rng"], cur[s])
+                    toks[s, 0] = t
+                    keep[s] = True
+                    trunk_tok[s].append(t)
+                    n_live += 1
+            logits, dwork = step_fn(self.dp, dwork, jnp.asarray(toks), jnp.asarray(keep))
+            w = np.asarray(self._warp(logits[:, 0]))
+            for s in active:
+                if keep[s]:
+                    cur[s] = w[s]
+                    trunk_q[s].append(w[s])
+            self.counters["draft_calls"] += 1
+            self.counters["draft_tokens"] += n_live
+
+        branch_tok = {s: [[] for _ in range(acts[s][0])] for s in active}
+        branch_q = {s: [[] for _ in range(acts[s][0])] for s in active}
+        if Kp and L2p:
+            dfork = fork_streams(dwork, Kp)
+            V = self.tc.vocab
+            curb = np.zeros((self.n_slots * Kp, V), np.float32)
+            for s in active:
+                for k in range(acts[s][0]):
+                    curb[s * Kp + k] = cur[s]
+            bstep = self._jit(f"drf_bstep_k{Kp}", partial(forward, cfg=self.dc, mode="decode"))
+            for j in range(L2m):
+                toks = np.zeros((self.n_slots * Kp, 1), np.int32)
+                n_live = 0
+                for s in active:
+                    K, _, L2 = acts[s]
+                    if j < L2:
+                        for k in range(K):
+                            t = draw_token(self.streams[s]["rng"], curb[s * Kp + k])
+                            toks[s * Kp + k, 0] = t
+                            branch_tok[s][k].append(t)
+                            n_live += 1
+                logits, dfork, _ = bstep(self.dp, tokens=jnp.asarray(toks), cache=dfork)
+                w = np.asarray(self._warp(logits[:, 0]))
+                for s in active:
+                    K, _, L2 = acts[s]
+                    if j < L2:
+                        for k in range(K):
+                            curb[s * Kp + k] = w[s * Kp + k]
+                            branch_q[s][k].append(w[s * Kp + k])
+                self.counters["draft_calls"] += 1
+                self.counters["draft_tokens"] += n_live
+
+        trees = {}
+        for s in active:
+            K, L1, L2 = acts[s]
+            tokens, parent, depth, pid, qs = [-1], [-1], [0], [0], [q0[s]]
+            node = 0
+            for j in range(L1):
+                tokens.append(trunk_tok[s][j])
+                parent.append(node)
+                depth.append(depth[node] + 1)
+                pid.append(0)
+                qs.append(trunk_q[s][j])
+                node = len(tokens) - 1
+            branch_nodes = [node] * K
+            for j in range(L2):
+                for k in range(K):
+                    tokens.append(branch_tok[s][k][j])
+                    parent.append(branch_nodes[k])
+                    depth.append(depth[branch_nodes[k]] + 1)
+                    pid.append(k)
+                    qs.append(branch_q[s][k][j])
+                    branch_nodes[k] = len(tokens) - 1
+            trees[s] = DraftTree(
+                tokens=np.asarray(tokens, np.int64),
+                parent=np.asarray(parent, np.int64),
+                depth=np.asarray(depth, np.int64),
+                q=np.stack(qs),
+                path_id=np.asarray(pid, np.int64),
+            )
+        return trees
+
+    # ----------------------------------------------------- target: tree -----
+
+    def _target_tree_pass(self, active, trees, Tpad):
+        ttoks = np.zeros((self.n_slots, Tpad), np.int32)
+        anc = np.tile(np.eye(Tpad, dtype=bool), (self.n_slots, 1, 1))
+        keep = np.zeros((self.n_slots,), bool)
+        for s in active:
+            tree = trees[s]
+            tt = tree.tokens.copy()
+            tt[0] = self.streams[s]["pending"]
+            n = tree.n_nodes
+            ttoks[s, :n] = tt
+            anc[s, :n, :n] = tree_ancestor_mask(tree.parent)
+            keep[s] = True
+        before = self.tpool.cache
+        fn = self._jit(f"tgt_tree_p{Tpad}", make_pool_tree_step(self.tc))
+        logits, cache, hidden = fn(self.tp, before, jnp.asarray(ttoks), jnp.asarray(anc))
+        # idle slots must not advance; active rows keep the tree writes the
+        # per-stream commit below relies on
+        self.tpool.cache = merge_streams(cache, before, keep)
+        self.counters["target_calls"] += 1
+        self.counters["target_tokens"] += sum(trees[s].n_nodes for s in active)
+        return np.asarray(self._warp(logits)), np.asarray(hidden)
+
+    def _commit_tree_row(self, slot: int, C: int, node_path: list[int], T: int):
+        """Row-wise mirror of SpeculativeEngine._commit_tree_cache."""
+        cache = self.tpool.cache
+        a = cache["attn"]
+        smax = a["k"].shape[2]
+        tree_slots = (C + np.arange(T)) % smax
+        src = [(C + n) % smax for n in node_path]
+        dst = [(C + 1 + j) % smax for j in range(len(node_path))]
+        k, v, pos = a["k"], a["v"], a["pos"]
+        if src:
+            src_i = jnp.asarray(src)
+            dst_i = jnp.asarray(dst)
+            k = k.at[:, slot, dst_i].set(k[:, slot, src_i])
+            v = v.at[:, slot, dst_i].set(v[:, slot, src_i])
+        pos = pos.at[slot, jnp.asarray(tree_slots)].set(-1)
+        keep = np.asarray([(C + j) % smax for j in range(1 + len(node_path))])
+        pos = pos.at[slot, jnp.asarray(keep)].set(
+            jnp.asarray(C + np.arange(1 + len(node_path)), jnp.int32)
+        )
+        new_len = a["len"].at[slot].set(C + 1 + len(node_path))
+        cache = dict(cache)
+        cache["attn"] = {"k": k, "v": v, "pos": pos, "len": new_len}
+        self.tpool.cache = cache
+
+    # --------------------------------------------------- target: replay -----
+
+    def _target_replay(self, active, trees, acts, Kp):
+        """Recurrent targets: grouped trunk decode + forked branch replay.
+        Returns (snapshot, per-slot p matrices) ready for verification."""
+        snapshot = self.tpool.cache
+        structs = {s: delayed_structure(trees[s]) for s in active}
+        p_host = {s: np.zeros((trees[s].n_nodes, trees[s].vocab)) for s in active}
+        work = snapshot
+        groups = defaultdict(list)
+        for s in active:
+            trunk, _, _ = structs[s]
+            groups[1 + len(trunk)].append(s)
+        for L, rows in sorted(groups.items()):
+            toks = np.zeros((len(rows), L), np.int32)
+            for i, s in enumerate(rows):
+                trunk, _, _ = structs[s]
+                toks[i, 0] = self.streams[s]["pending"]
+                for j, v in enumerate(trunk):
+                    toks[i, 1 + j] = int(trees[s].tokens[v])
+            rows_p, toks_p = self._pad_group(rows, toks, self.n_slots)
+            sub = gather_streams(snapshot, rows_p)
+            fn = self._jit(f"tgt_trunk_g{L}", partial(forward, cfg=self.tc, mode="decode"))
+            logits, sub, _ = fn(self.tp, tokens=jnp.asarray(toks_p), cache=sub)
+            work = scatter_streams(work, sub, rows_p)
+            w = np.asarray(self._warp(logits))
+            for i, s in enumerate(rows):
+                trunk, _, _ = structs[s]
+                p_host[s][0] = w[i, 0]
+                for j, v in enumerate(trunk):
+                    p_host[s][v] = w[i, 1 + j]
+            self.counters["target_calls"] += 1
+            self.counters["target_tokens"] += L * len(rows)
+
+        has_branches = [s for s in active if structs[s][2]]
+        if has_branches and Kp:
+            fork = fork_streams(work, Kp)
+            bgroups = defaultdict(list)
+            for s in has_branches:
+                _, _, branches = structs[s]
+                bgroups[len(branches[0])].append(s)
+            for L2, rows in sorted(bgroups.items()):
+                frows, meta = [], []
+                for s in rows:
+                    _, _, branches = structs[s]
+                    for k, path in enumerate(branches):
+                        frows.append(s * Kp + k)
+                        meta.append((s, path))
+                btoks = np.asarray(
+                    [[int(trees[s].tokens[v]) for v in path] for s, path in meta], np.int32
+                )
+                frows_p, btoks_p = self._pad_group(frows, btoks, self.n_slots * Kp)
+                sub = gather_streams(fork, frows_p)
+                fn = self._jit(f"tgt_branch_g{L2}k{Kp}", partial(forward, cfg=self.tc, mode="decode"))
+                logits, _, _ = fn(self.tp, tokens=jnp.asarray(btoks_p), cache=sub)
+                pb = np.asarray(self._warp(logits))
+                for i, (s, path) in enumerate(meta):
+                    for j, v in enumerate(path):
+                        p_host[s][v] = pb[i, j]
+                self.counters["target_calls"] += 1
+                self.counters["target_tokens"] += L2 * len(frows)
+        return snapshot, p_host
+
+    def _commit_replay(self, active, snapshot, accepted_by_slot):
+        """Restore the checkpoint and re-advance each stream along
+        [root] + accepted, grouped by commit length."""
+        new_pool = snapshot
+        hid_last = {}
+        groups = defaultdict(list)
+        for s in active:
+            groups[1 + len(accepted_by_slot[s])].append(s)
+        for L, rows in sorted(groups.items()):
+            toks = np.zeros((len(rows), L), np.int32)
+            for i, s in enumerate(rows):
+                toks[i, 0] = self.streams[s]["pending"]
+                for j, t in enumerate(accepted_by_slot[s]):
+                    toks[i, 1 + j] = int(t)
+            rows_p, toks_p = self._pad_group(rows, toks, self.n_slots)
+            sub = gather_streams(snapshot, rows_p)
+            fn = self._jit(f"tgt_commit_g{L}", partial(forward, cfg=self.tc, mode="decode"))
+            _, sub, ex = fn(self.tp, tokens=jnp.asarray(toks_p), cache=sub)
+            new_pool = scatter_streams(new_pool, sub, rows_p)
+            hid = np.asarray(ex["hidden"])
+            for i, s in enumerate(rows):
+                hid_last[s] = hid[i, L - 1]
+        self.tpool.cache = new_pool
+        return hid_last
+
+    # ---------------------------------------------------------------- step ---
+
+    def step(self) -> list[dict]:
+        """Admit queued requests, advance every active stream one speculative
+        block, and return per-request progress events."""
+        self._admit()
+        active = [s for s in sorted(self.streams) if not self.streams[s]["done"]]
+        if not active:
+            return []
+        acts = {s: tuple(self.choose_action(self.streams[s])) for s in active}
+        # eviction: a stream whose ring cannot hold another padded speculation
+        # block (the tree pass writes Tpad slots from the batch-maxima
+        # buckets) or the padded ingest width must finish instead of wrapping
+        # the ring onto committed slots.
+        _, _, _, Tpad = self._bucket_actions(acts)
+        Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
+        smax = self.ecfg.max_cache
+        for s in list(active):
+            C = len(self.streams[s]["committed"])
+            d = len(self.streams[s]["draft_delta"])
+            # tree pass writes Tpad slots from C-1; padded ingest writes Dp
+            # slots from the draft length C-d — either wrapping onto live
+            # slots would corrupt the committed prefix
+            if C - 1 + Tpad > smax or C - d + Dp > smax:
+                self.counters["evicted"] += 1
+                self._finish(s, reason="evicted:cache_full")
+                active.remove(s)
+                del acts[s]
+        if not active:
+            return []
+        # re-bucket: eviction can only shrink the maxima, never grow them
+        pads = self._bucket_actions(acts)
+        Kp, L1p, L2p, Tpad = pads
+        q0, hq = self._ingest_deltas(active)
+        trees = self._draft_trees(active, acts, q0, pads)
+
+        events = []
+        if self.strategy == "tree":
+            p_all, hid_all = self._target_tree_pass(active, trees, Tpad)
+            for s in active:
+                tree = trees[s]
+                n = tree.n_nodes
+                tree.p = p_all[s, :n].astype(np.float64)
+                st = self.streams[s]
+                accepted, corr = verify_tree(tree, self.ecfg.verifier, st["rng"])
+                node_path = SpeculativeEngine._accepted_nodes(tree, accepted)
+                C = len(st["committed"]) - 1
+                self._commit_tree_row(s, C, node_path, Tpad)
+                last_node = node_path[-1] if node_path else 0
+                st["h_prev_p"] = hid_all[s, last_node]
+                events.append(
+                    self._advance_stream(s, tree, accepted, int(corr), hq[s], node_path)
+                )
+        else:
+            snapshot, p_host = self._target_replay(active, trees, acts, Kp)
+            accepted_by_slot, corr_by_slot = {}, {}
+            for s in active:
+                tree = trees[s]
+                tree.p = p_host[s]
+                accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
+                accepted_by_slot[s] = accepted
+                corr_by_slot[s] = int(corr)
+            hid_last = self._commit_replay(active, snapshot, accepted_by_slot)
+            for s in active:
+                self.streams[s]["h_prev_p"] = hid_last[s]
+                events.append(
+                    self._advance_stream(s, trees[s], accepted_by_slot[s], corr_by_slot[s], hq[s])
+                )
+        return events
+
+    def _advance_stream(self, slot, tree, accepted, corr, h_q, node_path=None):
+        """Book-keeping shared with SpeculativeEngine.step."""
+        st = self.streams[slot]
+        nodes = (
+            node_path if node_path is not None
+            else SpeculativeEngine._accepted_nodes(tree, accepted)
+        )
+        st["p_prev"] = tree.p[nodes[-1]] if accepted else tree.p[0]
+        st["q_prev"] = tree.q[nodes[-1]] if accepted else tree.q[0]
+        new_tokens = list(accepted) + [corr]
+        st["committed"].extend(new_tokens)
+        st["pending"] = corr
+        st["draft_delta"] = new_tokens
+        st["h_prev_q"] = h_q
+        st["out"].extend(new_tokens)
+        self.counters["accepted"] += len(accepted)
+        self.counters["blocks"] += 1
+        ev = {"rid": st["rid"], "new_tokens": new_tokens,
+              "done": len(st["out"]) >= st["max_new"]}
+        if ev["done"]:
+            self._finish(slot)
+        return ev
+
+    # ----------------------------------------------------------------- run ---
+
+    def run(self) -> dict[int, dict]:
+        """Drain the queue: step until every submitted request finished.
+
+        Returns ``{rid: {"tokens", "reason"}}`` for the requests completed by
+        this call, removing them from the engine — a long-lived serving loop
+        does not accumulate finished payloads, and repeated calls never
+        re-return stale results."""
+        done: dict[int, dict] = {}
+
+        def drain():
+            while self.finished:
+                rid, info = self.finished.popitem()
+                done[rid] = info
+
+        drain()
+        while self.queue or self.streams:
+            before = len(done)
+            self.step()
+            drain()
+            if not self.streams and not self.queue:
+                break
+            assert self.streams or len(done) > before, "scheduler stalled"
+        return done
+
+    def generate_batch(self, prompts, max_new: int = 32, seeds=None) -> list[list[int]]:
+        """Convenience: submit all prompts, drain, return outputs in order."""
+        rids = [
+            self.submit(p, max_new, None if seeds is None else seeds[i])
+            for i, p in enumerate(prompts)
+        ]
+        out = self.run()
+        return [out[r]["tokens"] for r in rids]

@@ -30,34 +30,40 @@ import numpy as np
 from repro.core.trees import DraftTree, tree_ancestor_mask
 from repro.core.traversal import verify_traversal
 from repro.core.verify import verify_bv, verify_naive_single, verify_topdown
+from repro.models.cache import fork_streams
 from repro.models.transformer import cache_length, forward, init_cache
 from repro.sampling import warp_logits
 
 TOPDOWN = {"nss", "naive", "naivetree", "spectr", "specinfer", "khisti"}
 
 
+def draw_token(rng: np.random.Generator, dist: np.ndarray) -> int:
+    """Sample one token from a warped distribution.
+
+    The single draw primitive both engines share: batch-vs-single exactness
+    requires identical rng consumption, so neither engine may inline its own
+    variant of this."""
+    return int(rng.choice(len(dist), p=dist / dist.sum()))
+
+
+def verify_tree(tree: DraftTree, verifier: str, rng: np.random.Generator):
+    """Host-side verifier dispatch — the single mapping both engines share.
+    Returns (accepted_tokens, correction_token)."""
+    if verifier == "traversal":
+        return verify_traversal(tree, rng)
+    if verifier == "bv":
+        return verify_bv(tree, rng)
+    if verifier == "naive_single":
+        return verify_naive_single(tree, rng)
+    return verify_topdown(tree, verifier, rng)
+
+
 def fork_cache(cfg, cache: dict, K: int) -> dict:
     """Replicate a single-stream cache K ways along its batch axis.
 
-    Batch-axis position differs per array family:
-      attn k/v (L,B,S,H,D): 1   ssm state/conv (L,B,...): 1
-      hybrid rec_state/rec_conv (G, g-1, B, ...): 2   tail_* (rem, B, ...): 1
-      cross_k/v (L,B,S,H,D): 1   pos/len: shared (not replicated)
-    """
-    out = {}
-    for key, val in cache.items():
-        if key == "attn":
-            a = dict(val)
-            a["k"] = jnp.repeat(val["k"], K, axis=1)
-            a["v"] = jnp.repeat(val["v"], K, axis=1)
-            out[key] = a
-        elif key in ("rec_state", "rec_conv"):
-            out[key] = jnp.repeat(val, K, axis=2)
-        elif key in ("state", "conv", "tail_state", "tail_conv", "cross_k", "cross_v"):
-            out[key] = jnp.repeat(val, K, axis=1)
-        else:
-            out[key] = val
-    return out
+    Thin wrapper over :func:`repro.models.cache.fork_streams`, which owns the
+    per-family batch-axis map (lockstep pos/len stay shared)."""
+    return fork_streams(cache, K)
 
 
 @dataclass
@@ -204,7 +210,7 @@ class SpeculativeEngine:
         node = 0
         # trunk: sequential single-token drafting
         for _ in range(L1):
-            t = int(rng.choice(len(qs[node]), p=qs[node] / qs[node].sum()))
+            t = draw_token(rng, qs[node])
             d1, dcache, _ = self._draft_decode(dcache, [t])
             tokens.append(t)
             parent.append(node)
@@ -220,7 +226,7 @@ class SpeculativeEngine:
             cur_q = np.stack([qs[branch_node]] * K)
             branch_nodes = [branch_node] * K
             for j in range(L2):
-                ts = [int(rng.choice(cur_q.shape[1], p=cur_q[k] / cur_q[k].sum())) for k in range(K)]
+                ts = [draw_token(rng, cur_q[k]) for k in range(K)]
                 fn = self._jit("draft_branch", partial(forward, cfg=self.dc, mode="decode"))
                 logits, fork, _ = fn(
                     self.dp, tokens=jnp.asarray(np.asarray(ts, np.int32)[:, None]), cache=fork
@@ -257,16 +263,9 @@ class SpeculativeEngine:
     # -------------------------------------------------------------- verify ---
 
     def _verify(self, tree: DraftTree):
-        v = self.ecfg.verifier
-        if v == "traversal":
-            return verify_traversal(tree, self.rng)
-        if v == "bv":
-            return verify_bv(tree, self.rng)
-        if v == "naive_single":
-            return verify_naive_single(tree, self.rng)
-        if self.ecfg.verify_on_device:
-            return self._verify_jax(tree, v)
-        return verify_topdown(tree, v, self.rng)
+        if self.ecfg.verify_on_device and self.ecfg.verifier in TOPDOWN:
+            return self._verify_jax(tree, self.ecfg.verifier)
+        return verify_tree(tree, self.ecfg.verifier, self.rng)
 
     def _verify_jax(self, tree: DraftTree, solver: str):
         """On-device whole-tree verification (core/otlp_jax)."""

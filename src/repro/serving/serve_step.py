@@ -5,6 +5,10 @@ serve_step:      one new token per request against a KV/state cache of
 tree_serve_step: one speculation block per request — T tree tokens with a
                  shared topology (the production form of the paper's target
                  pass; used by the benchmarks to price tree passes).
+pool steps:      the continuous-batching forms over a per-stream cache pool
+                 (models/cache.py): per-row lengths, padded token counts
+                 masked by ``lens``, and per-row tree topologies — the units
+                 BatchedSpeculativeEngine executes.
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.models.cache import merge_streams
 from repro.models.transformer import forward
 
 
@@ -48,3 +53,48 @@ def make_prefill_step(cfg):
         return logits, new_cache
 
     return prefill
+
+
+def make_pool_decode_step(cfg):
+    """(params, pool_cache, tokens (B, Tpad), lens (B,)) ->
+    (logits, cache, hidden).
+
+    Padded decode over a per-stream pool: row b's tokens beyond lens[b] are
+    written but invalidated (pos = -1), so heterogeneous per-stream deltas
+    advance in one call.  Attention-family archs only (recurrent state
+    cannot be length-masked — use make_pool_locked_step)."""
+
+    def step(params, cache, tokens, lens):
+        logits, new_cache, ex = forward(params, cfg, tokens, mode="decode", cache=cache, lens=lens)
+        return logits, new_cache, ex["hidden"]
+
+    return step
+
+
+def make_pool_locked_step(cfg):
+    """(params, pool_cache, tokens (B, 1), keep (B,)) -> (logits, cache).
+
+    One lockstep token per stream; rows with keep=False are frozen at their
+    exact prior state (merge_streams), which is the recurrent-safe padding
+    primitive."""
+
+    def step(params, cache, tokens, keep):
+        logits, new_cache, _ = forward(params, cfg, tokens, mode="decode", cache=cache)
+        return logits, merge_streams(new_cache, cache, keep)
+
+    return step
+
+
+def make_pool_tree_step(cfg):
+    """(params, pool_cache, tokens (B, Tpad), anc (B, Tpad, Tpad)) ->
+    (logits, cache, hidden).
+
+    The continuous-batching target pass: per-row tree topologies over a
+    per-stream cache pool.  Padding nodes are isolated roots (anc = self
+    only) — never attended by real nodes and invalidated at commit."""
+
+    def tree_step(params, cache, tokens, anc):
+        logits, new_cache, ex = forward(params, cfg, tokens, mode="tree", cache=cache, anc=anc)
+        return logits, new_cache, ex["hidden"]
+
+    return tree_step

@@ -1,0 +1,95 @@
+"""Tiny vendored property-check shim: a hypothesis-free `given/settings/
+strategies` workalike driven by `np.random.default_rng`.
+
+The environment has no `hypothesis`, but the losslessness suites are
+property tests at heart.  This shim keeps their shape — strategies describe
+the case space, `@given` sweeps it — with deterministic seeding (crc32 of
+the test name), so runs are reproducible and the same case diversity is
+preserved.  No shrinking; on failure the drawn example is attached to the
+assertion so the case can be replayed by hand.
+
+Usage (drop-in for the subset the suites use):
+
+    from _propcheck import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.1, 0.999))
+    def test_prop(seed, top_p): ...
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        # hypothesis bounds are inclusive
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(min_value + (max_value - min_value) * rng.random()))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Set the sweep size.  Composes with @given in either order."""
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Sweep the wrapped test over `max_examples` deterministic draws."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_propcheck_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_propcheck_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                example = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *example, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {fn.__name__}{example}: {e}"
+                    ) from e
+
+        # the strategy-bound params are filled by the sweep, not by pytest
+        # fixtures — present a parameterless signature to collection
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

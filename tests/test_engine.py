@@ -38,6 +38,7 @@ HYB_CFG = ModelConfig(name="h", arch_type="hybrid", n_layers=5, d_model=48, n_he
                       n_kv_heads=1, d_ff=96, vocab=V, local_window=32, dtype="float32")
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("cfg", [_dense(2, 48), SSM_CFG, HYB_CFG], ids=["dense", "ssm", "hybrid"])
 @pytest.mark.parametrize("verifier,K,L1,L2,expect", [
     ("naive_single", 1, 0, 3, 4.0),
@@ -54,6 +55,7 @@ def test_self_draft_full_acceptance(cfg, verifier, K, L1, L2, expect):
     assert abs(be - expect) < 1e-6, be
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("verifier", ["specinfer", "traversal", "spectr", "khisti", "nss"])
 def test_engine_first_token_distribution(models, verifier):
     """The first emitted token across many seeds must follow the warped target."""
@@ -79,6 +81,7 @@ def test_engine_first_token_distribution(models, verifier):
     assert np.abs(freq - p_direct).max() < 0.09, np.abs(freq - p_direct).max()
 
 
+@pytest.mark.slow
 def test_counters_and_block_structure(models):
     tc, tp, dc, dp = models
     eng = SpeculativeEngine(tc, tp, dc, dp, EngineConfig(verifier="spectr", K=3, L1=2, L2=2, max_cache=256))
@@ -91,6 +94,7 @@ def test_counters_and_block_structure(models):
     assert 0 <= c["accepted"] <= c["blocks"] * 8
 
 
+@pytest.mark.slow
 def test_greedy_temperature_zero(models):
     """temperature=0 -> engine output equals greedy target decoding exactly."""
     tc, tp, dc, dp = models
@@ -106,6 +110,7 @@ def test_greedy_temperature_zero(models):
     assert out == ctx[2:], (out, ctx[2:])
 
 
+@pytest.mark.slow
 def test_nucleus_sampling_support(models):
     """top_p < 1: emitted tokens must stay within the warped support."""
     tc, tp, dc, dp = models
@@ -123,6 +128,7 @@ def test_nucleus_sampling_support(models):
             assert dist[t] > 0, (t, i)
 
 
+@pytest.mark.slow
 def test_analytic_selector_runs(models):
     from repro.core.delayed import LatencyModel
     from repro.serving.nde import AnalyticSelector

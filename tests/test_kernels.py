@@ -1,10 +1,11 @@
 """Pallas kernel validation (interpret mode) against the pure-jnp oracles:
-shape/dtype sweeps with assert_allclose, plus hypothesis property checks."""
+shape/dtype sweeps with assert_allclose, plus seeded property checks
+(the vendored _propcheck shim)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.kernels.ops import gqa_decode_attention, gqa_tree_attention
 from repro.kernels.ref import decode_attention_ref, tree_attention_ref
@@ -30,6 +31,7 @@ def _ref_tree(q, k, v, mask):
     return tree_attention_ref(qr, kr, vr, mr).reshape(B, H, T, D).transpose(0, 2, 1, 3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("T", [1, 5, 8, 17])
 @pytest.mark.parametrize("S,block_k", [(64, 128), (96, 128), (256, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -50,6 +52,7 @@ def test_tree_attention_gqa_groups(H, Hkv):
     np.testing.assert_allclose(np.asarray(out), np.asarray(_ref_tree(q, k, v, mask)), atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("S,lengths", [(128, (7, 128)), (256, (250, 1))])
 @pytest.mark.parametrize("window", [0, 16])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -75,6 +78,7 @@ def test_decode_attention_sweep(S, lengths, window, dtype):
     )
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 10), st.integers(1, 200), st.integers(0, 2**31 - 1))
 def test_tree_attention_property(T, S, seed):

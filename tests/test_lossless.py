@@ -7,7 +7,7 @@ several (K, L1, L2) including root rollouts and pure paths.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.enumerate import (
     RandomModel,

@@ -22,6 +22,7 @@ def _batch_kwargs(cfg, rng):
     return kw
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_arches())
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)
@@ -45,6 +46,7 @@ def test_smoke_forward_and_train_step(arch):
     assert not np.allclose(np.asarray(l0, np.float32), np.asarray(l1, np.float32))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-8b", "qwen3-moe-235b-a22b", "mamba2-2.7b",
                                   "recurrentgemma-2b", "whisper-medium", "internvl2-26b"])
 def test_decode_consistency(arch):

@@ -6,6 +6,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.delayed import LatencyModel
 from repro.core.selector import FixedSpace, SelectorConfig, init_selector, selector_loss
@@ -77,6 +78,7 @@ def test_synthetic_lm_determinism_and_learnability():
     assert row_H < np.log(64) * 0.6
 
 
+@pytest.mark.slow
 def test_selector_loss_prefers_better_actions():
     """After training on a batch where action 1 dominates, the policy must
     put its argmax on action 1."""
