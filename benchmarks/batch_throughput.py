@@ -15,7 +15,9 @@ Wall-clock excludes compilation: each engine first runs the whole workload
 untimed (populating its jit cache for every shape bucket the workload
 hits), then the timed pass re-runs it — so the comparison prices the
 steady-state serving loop.  Outputs are seeded identically, so the batched
-column also re-checks the exactness contract while it measures.
+column also re-checks the exactness contract while it measures.  Each row
+surfaces the engine's commit counters (one fused commit call per step —
+see benchmarks/commit_bench.py for the commit-path microbenchmark).
 """
 from __future__ import annotations
 
@@ -55,6 +57,7 @@ def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
 
 def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
     eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts))
+    eng.profile_commits = True  # honest commit_ms: block on the commit op
 
     def workload():
         rids = [eng.submit(list(p), max_new=max_new, seed=sd) for p, sd in zip(prompts, seeds)]
@@ -62,9 +65,11 @@ def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
         return [outs[r]["tokens"] for r in rids]
 
     workload()  # warm every shape the workload compiles
+    eng.counters["commit_calls"] = 0
+    eng.counters["commit_ms"] = 0.0
     t0 = time.time()
     outs = workload()
-    return outs, time.time() - t0
+    return outs, time.time() - t0, dict(eng.counters)
 
 
 def main(argv=None):
@@ -97,13 +102,16 @@ def main(argv=None):
         seeds = [args.seed + 100 + i for i in range(n)]
         outs_s, dt_s = run_sequential(cfg, tp, dcfg, dp, ecfg, sampling,
                                       prompts, args.max_new, seeds)
-        outs_b, dt_b = run_batched(cfg, tp, dcfg, dp, ecfg, sampling,
-                                   prompts, args.max_new, seeds)
+        outs_b, dt_b, counters = run_batched(cfg, tp, dcfg, dp, ecfg, sampling,
+                                             prompts, args.max_new, seeds)
         tok = n * args.max_new
         exact = all(a == b for a, b in zip(outs_s, outs_b))
         rows.append((n, tok / dt_s, tok / dt_b, exact))
+        cc = max(counters["commit_calls"], 1)
         print(f"{n:>5} {tok / dt_s:>10.2f} {tok / dt_b:>14.2f} "
-              f"{dt_s / dt_b:>7.2f}x {'yes' if exact else 'NO':>6}")
+              f"{dt_s / dt_b:>7.2f}x {'yes' if exact else 'NO':>6}"
+              f"   commit: {counters['commit_calls']} calls, "
+              f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)")
     if len(rows) > 1:
         first, last = rows[0], rows[-1]
         scale = last[2] / first[2]

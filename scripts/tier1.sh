@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Fast tier-1 verify in one invocation: the non-slow test tier with the
+# src/ tree on PYTHONPATH (see ROADMAP.md "Tier-1 verify" for the full run).
+#
+#   scripts/tier1.sh            # fast tier
+#   scripts/tier1.sh -k commit  # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q -m "not slow" "$@"

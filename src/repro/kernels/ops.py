@@ -17,6 +17,24 @@ from repro.kernels.decode_attention import decode_attention
 from repro.kernels.tree_attention import tree_attention
 
 
+def pool_commit_kv(k, v, src, dst, *, use_pallas: bool = False, interpret: bool = True):
+    """Ring-compaction commit over the per-stream KV pool.
+
+    k, v (L, B, Smax, Hkv, hd); src, dst (B, P) int32 slot indices (padding
+    entries carry src == dst).  The Pallas path (kernels/commit_kv.py) moves
+    only the touched (layer, row, slot) lanes in place; the ref path is the
+    pure-jnp gather/scatter oracle.  Both honour the hazard-free index
+    contract documented in serve_step.make_pool_commit_step.
+    """
+    if use_pallas:
+        from repro.kernels.commit_kv import commit_kv
+
+        return commit_kv(k, v, src, dst, interpret=interpret)
+    from repro.kernels.ref import commit_kv_ref
+
+    return commit_kv_ref(k, v, src, dst)
+
+
 def _pad_to(x, mult, axis):
     pad = (-x.shape[axis]) % mult
     if pad == 0:

@@ -16,6 +16,21 @@ def tree_attention_ref(q, k, v, mask):
     return jnp.einsum("bts,bsd->btd", w, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def commit_kv_ref(k, v, src, dst):
+    """Gather-then-scatter oracle for the ring-compaction commit kernel.
+
+    k, v: (L, B, Smax, Hkv, hd); src, dst: (B, P) int32.  Every source lane
+    is read before any destination is written, so this is the ground truth
+    the in-place sequential kernel must match under the hazard-free index
+    contract (a src slot is never an earlier entry's dst slot, dst slots
+    pairwise distinct; padding entries are identity copies with src == dst).
+    """
+    b = jnp.arange(k.shape[1])[:, None]
+    kg = k[:, b, src]
+    vg = v[:, b, src]
+    return k.at[:, b, dst].set(kg), v.at[:, b, dst].set(vg)
+
+
 def decode_attention_ref(q, k, v, lengths, window: int = 0):
     """q (BH, R, D); k, v (BH, S, D); lengths (BH, 1) -> (BH, R, D)."""
     S = k.shape[1]

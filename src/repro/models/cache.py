@@ -19,6 +19,28 @@ Layout (leading layer axis L, scanned):
            len: () or (B,) int32
     ssm:   state: (L, B, H, P, N); conv: (L, B, K-1, C);  len: () or (B,)
     rglru: state: (L, B, D); conv: (L, B, 3, D);          len: () or (B,)
+
+Ring-compaction commit contract (serving/serve_step.make_pool_commit_step):
+a tree pass appends a block of Tpad speculative tokens at slots
+(C + t) % Smax for t = 0..Tpad-1, where C is the row's committed length
+before the block (so the pending root token sits at slot C % Smax).
+Committing an accepted node path [n_1 < n_2 < ... < n_tau] then
+
+  * moves KV lanes  (C + n_j) % Smax  ->  (C + j) % Smax  for j = 1..tau
+    (dst slots are the contiguous run C+1 .. C+tau);
+  * invalidates every block slot: pos[(C + t) % Smax] = -1 for the whole
+    padded block, for every layer-shared pos table of the row;
+  * rewrites pos over the surviving run: pos[(C + j) % Smax] = C + j for
+    j = 0..tau (the root at C stays committed);
+  * advances the row's len to C + 1 + tau.
+
+Accepted node indices are strictly increasing with n_j >= j + 1 (deeper
+tree nodes are always appended later), so a source slot is never an
+EARLIER entry's destination (n_j = i + 1 needs i >= j) and destinations
+are pairwise distinct: every entry reads its pre-commit value, making the
+sequential in-place copy (kernels/commit_kv.py) exactly gather-then-
+scatter.  Ragged paths pad with identity copies of the root slot, which
+no real entry writes.
 """
 from __future__ import annotations
 
@@ -167,6 +189,26 @@ def scatter_streams(pool: dict, rows_cache: dict, slots) -> dict:
         return jnp.moveaxis(dst_m.at[slots].set(src_m), 0, ax)
 
     return _walk(pool, rows_cache, put)
+
+
+def concat_streams(caches: list[dict]) -> dict:
+    """Concatenate several per-stream caches along their stream axis.
+
+    Used to fuse a step's row-sized sub-caches (one per length group) into a
+    single rows-cache so the pool write-back is ONE scatter_streams call
+    instead of one full-pool copy per group.  Arrays without a stream axis
+    (lockstep pos/len) are taken from the first cache.
+    """
+    axes = _walk(caches[0], None, lambda a, _, ax: ax)
+
+    def rec(vals, ax):
+        if isinstance(vals[0], dict):
+            return {key: rec([v[key] for v in vals], ax[key]) for key in vals[0]}
+        if ax is None:
+            return vals[0]
+        return jnp.concatenate(vals, axis=ax)
+
+    return rec(list(caches), axes)
 
 
 def merge_streams(new: dict, old: dict, keep) -> dict:

@@ -4,9 +4,15 @@
 draft call, so multi-user throughput is bounded by single-stream latency.
 This module packs every active stream into lockstep batched calls — per
 iteration one padded draft-ingest pass, one padded draft step per tree level,
-ONE padded tree-masked target pass — with per-stream host verification, so
-aggregate tokens/sec scales with the number of streams while each stream's
-output remains exactly the warped target process.
+ONE padded tree-masked target pass, and ONE jitted pool-donating commit —
+with per-stream host verification, so aggregate tokens/sec scales with the
+number of streams while each stream's output remains exactly the warped
+target process.  The commit path is device-resident: host->device traffic
+per step is small index arrays (tokens, parent pointers, accepted-path
+tables) staged in reusable buffers; ancestor masks are composed on device
+and the ring compaction moves only touched (row, slot) KV lanes
+(serve_step.make_pool_commit_step / kernels/commit_kv.py) instead of
+copying the pool once per stream.
 
 Substrate (models/cache.py): a slot-based per-stream KV pool.  Every model
 call sees the same (n_slots, ...) shapes, so streams join (prefill a 1-row
@@ -38,6 +44,7 @@ block in its cache ring.  ``launch/serve.py --streams N`` drives this engine.
 """
 from __future__ import annotations
 
+import time
 from collections import defaultdict
 from dataclasses import dataclass, field
 from functools import partial
@@ -47,12 +54,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.traversal import delayed_structure
-from repro.core.trees import DraftTree, tree_ancestor_mask
+from repro.core.trees import DraftTree
 from repro.models.cache import (
     CachePool,
+    concat_streams,
     fork_streams,
     gather_streams,
-    merge_streams,
     scatter_streams,
 )
 from repro.models.transformer import forward, init_cache
@@ -65,19 +72,14 @@ from repro.serving.engine import (
     verify_tree,
 )
 from repro.serving.serve_step import (
+    make_pool_commit_step,
     make_pool_decode_step,
     make_pool_locked_step,
     make_pool_tree_step,
+    next_pow2 as _next_pow2,
 )
 
 RECURRENT = ("ssm", "hybrid")
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
 
 
 @dataclass
@@ -127,15 +129,58 @@ class BatchedSpeculativeEngine:
         self.finished: dict[int, dict] = {}
         self._next_rid = 0
         self._jit_cache: dict = {}
+        self._staging: dict = {}
+        # commit_ms times the dispatch only unless profile_commits is set
+        # (benchmarks set it): blocking on the commit every step would
+        # serialize host bookkeeping against the device op it just saved.
+        self.profile_commits = False
         self.counters = {"target_calls": 0, "target_tokens": 0, "draft_calls": 0,
-                         "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0}
+                         "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0,
+                         "commit_calls": 0, "commit_ms": 0.0}
 
     # ------------------------------------------------------------- helpers ---
 
-    def _jit(self, name, fn):
+    def _jit(self, name, fn, donate_argnums=None):
+        """Per-engine jit cache.  ``donate_argnums`` marks pool args whose
+        buffers XLA may update in place (the commit path donates the pool so
+        committing moves lanes instead of copying the pool)."""
         if name not in self._jit_cache:
-            self._jit_cache[name] = jax.jit(fn)
+            kw = {} if donate_argnums is None else {"donate_argnums": donate_argnums}
+            self._jit_cache[name] = jax.jit(fn, **kw)
         return self._jit_cache[name]
+
+    def _stage(self, name, shape, dtype, fill=0):
+        """Reusable host staging buffer for per-step index arrays.
+
+        Every phase ends with a blocking host read of its outputs, so a
+        buffer is always consumed by the device before it is refilled —
+        staging keeps the per-step H2D traffic at a handful of small,
+        allocation-free index arrays."""
+        key = (name, shape)
+        buf = self._staging.get(key)
+        if buf is None:
+            buf = self._staging[key] = np.empty(shape, dtype)
+        buf.fill(fill)
+        return buf
+
+    def _scatter_rows(self, pool_cache, trims, rows, *, donate: bool):
+        """Write per-row sub-caches back into a pool with ONE scatter call.
+
+        ``trims`` are row-sized caches (concatenated along the stream axis)
+        — so the write-back moves touched rows only, once, instead of one
+        full-pool ``scatter_streams`` copy per length group.  Rows are
+        padded to n_slots with repeats of the first row (identical values
+        re-written to the same slot) so the call compiles once."""
+        combined = trims[0] if len(trims) == 1 else concat_streams(trims)
+        rows = list(rows)
+        pad = self.n_slots - len(rows)
+        if pad:
+            filler = gather_streams(combined, [0] * pad)
+            combined = concat_streams([combined, filler])
+            rows = rows + [rows[0]] * pad
+        name = "commit_scatter" if donate else "stage_scatter"
+        fn = self._jit(name, scatter_streams, donate_argnums=0 if donate else None)
+        return fn(pool_cache, combined, jnp.asarray(np.asarray(rows, np.int32)))
 
     def _warp(self, logits):
         return warp_logits(logits, self.sampling.temperature, self.sampling.top_p)
@@ -236,13 +281,15 @@ class BatchedSpeculativeEngine:
             groups = defaultdict(list)
             for s in active:
                 groups[len(self.streams[s]["draft_delta"])].append(s)
+            trims, all_rows = [], []
             for L, rows in sorted(groups.items()):
                 toks = np.asarray([self.streams[s]["draft_delta"] for s in rows], np.int32)
                 rows_p, toks_p = self._pad_group(rows, toks, self.n_slots)
                 sub = gather_streams(self.dpool.cache, rows_p)
                 fn = self._jit(f"drf_ing_g{L}", partial(forward, cfg=self.dc, mode="decode"))
                 logits, sub, ex = fn(self.dp, tokens=jnp.asarray(toks_p), cache=sub)
-                self.dpool.cache = scatter_streams(self.dpool.cache, sub, rows_p)
+                trims.append(gather_streams(sub, list(range(len(rows)))))
+                all_rows.extend(rows)
                 w = np.asarray(self._warp(logits))
                 hid = np.asarray(ex["hidden"])
                 for i, s in enumerate(rows):
@@ -250,10 +297,13 @@ class BatchedSpeculativeEngine:
                     hq[s] = hid[i, L - 1]
                 self.counters["draft_calls"] += 1
                 self.counters["draft_tokens"] += L * len(rows)
+            # one donated write-back for every length group's rows
+            self.dpool.cache = self._scatter_rows(self.dpool.cache, trims, all_rows,
+                                                  donate=True)
         else:
             Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
-            toks = np.zeros((self.n_slots, Dp), np.int32)
-            lens = np.zeros((self.n_slots,), np.int32)
+            toks = self._stage("ing_toks", (self.n_slots, Dp), np.int32)
+            lens = self._stage("ing_lens", (self.n_slots,), np.int32)
             for s in active:
                 d = self.streams[s]["draft_delta"]
                 toks[s, : len(d)] = d
@@ -384,64 +434,76 @@ class BatchedSpeculativeEngine:
     # ----------------------------------------------------- target: tree -----
 
     def _target_tree_pass(self, active, trees, Tpad):
-        ttoks = np.zeros((self.n_slots, Tpad), np.int32)
-        anc = np.tile(np.eye(Tpad, dtype=bool), (self.n_slots, 1, 1))
-        keep = np.zeros((self.n_slots,), bool)
+        """One padded tree-masked target pass over every active row.
+
+        The host ships (B, Tpad) token and parent-pointer index arrays only:
+        ancestor masks are composed on device (device_ancestor_mask) and the
+        idle-row freeze happens inside the same jit call — no per-iteration
+        (B, Tpad, Tpad) mask tensor is rebuilt or transferred."""
+        ttoks = self._stage("tree_toks", (self.n_slots, Tpad), np.int32)
+        parents = self._stage("tree_parents", (self.n_slots, Tpad), np.int32, fill=-1)
+        keep = self._stage("tree_keep", (self.n_slots,), np.bool_, fill=False)
         for s in active:
             tree = trees[s]
-            tt = tree.tokens.copy()
-            tt[0] = self.streams[s]["pending"]
             n = tree.n_nodes
-            ttoks[s, :n] = tt
-            anc[s, :n, :n] = tree_ancestor_mask(tree.parent)
+            ttoks[s, :n] = tree.tokens
+            ttoks[s, 0] = self.streams[s]["pending"]
+            parents[s, :n] = tree.parent
             keep[s] = True
-        before = self.tpool.cache
-        fn = self._jit(f"tgt_tree_p{Tpad}", make_pool_tree_step(self.tc))
-        logits, cache, hidden = fn(self.tp, before, jnp.asarray(ttoks), jnp.asarray(anc))
-        # idle slots must not advance; active rows keep the tree writes the
-        # per-stream commit below relies on
-        self.tpool.cache = merge_streams(cache, before, keep)
+        fn = self._jit(f"tgt_tree_p{Tpad}", make_pool_tree_step(self.tc),
+                       donate_argnums=1)
+        logits, cache, hidden = fn(self.tp, self.tpool.cache, jnp.asarray(ttoks),
+                                   jnp.asarray(parents), jnp.asarray(keep))
+        self.tpool.cache = cache
         self.counters["target_calls"] += 1
         self.counters["target_tokens"] += sum(trees[s].n_nodes for s in active)
         return np.asarray(self._warp(logits)), np.asarray(hidden)
 
-    def _commit_tree_row(self, slot: int, C: int, node_path: list[int], T: int):
-        """Row-wise mirror of SpeculativeEngine._commit_tree_cache."""
-        cache = self.tpool.cache
-        a = cache["attn"]
-        smax = a["k"].shape[2]
-        tree_slots = (C + np.arange(T)) % smax
-        src = [(C + n) % smax for n in node_path]
-        dst = [(C + 1 + j) % smax for j in range(len(node_path))]
-        k, v, pos = a["k"], a["v"], a["pos"]
-        if src:
-            src_i = jnp.asarray(src)
-            dst_i = jnp.asarray(dst)
-            k = k.at[:, slot, dst_i].set(k[:, slot, src_i])
-            v = v.at[:, slot, dst_i].set(v[:, slot, src_i])
-        pos = pos.at[slot, jnp.asarray(tree_slots)].set(-1)
-        keep = np.asarray([(C + j) % smax for j in range(1 + len(node_path))])
-        pos = pos.at[slot, jnp.asarray(keep)].set(
-            jnp.asarray(C + np.arange(1 + len(node_path)), jnp.int32)
-        )
-        new_len = a["len"].at[slot].set(C + 1 + len(node_path))
-        cache = dict(cache)
-        cache["attn"] = {"k": k, "v": v, "pos": pos, "len": new_len}
-        self.tpool.cache = cache
+    def _commit_tree_batch(self, active, node_paths, Tpad):
+        """Fused commit: ONE jitted, pool-donating call re-compacts every
+        active row's accepted path (serve_step.make_pool_commit_step) —
+        the tentpole replacing the per-stream eager ``.at[].set`` chains
+        (kept as serve_step.commit_row_reference, the test/bench oracle)."""
+        B = self.n_slots
+        P = _next_pow2(max([len(node_paths[s]) for s in active] + [1]))
+        npath = self._stage("commit_path", (B, P), np.int32)
+        plen = self._stage("commit_plen", (B,), np.int32)
+        Cb = self._stage("commit_C", (B,), np.int32)
+        act = self._stage("commit_act", (B,), np.bool_, fill=False)
+        for s in active:
+            path = node_paths[s]
+            npath[s, : len(path)] = path
+            plen[s] = len(path)
+            Cb[s] = len(self.streams[s]["committed"]) - 1
+            act[s] = True
+        fn = self._jit(f"commit_T{Tpad}_P{P}",
+                       make_pool_commit_step(self.tc, Tpad), donate_argnums=0)
+        t0 = time.perf_counter()
+        self.tpool.cache = fn(self.tpool.cache, jnp.asarray(npath), jnp.asarray(plen),
+                              jnp.asarray(Cb), jnp.asarray(act))
+        if self.profile_commits:
+            jax.block_until_ready(self.tpool.cache)
+        self.counters["commit_calls"] += 1
+        self.counters["commit_ms"] += (time.perf_counter() - t0) * 1e3
 
     # --------------------------------------------------- target: replay -----
 
     def _target_replay(self, active, trees, acts, Kp):
         """Recurrent targets: grouped trunk decode + forked branch replay.
-        Returns (snapshot, per-slot p matrices) ready for verification."""
+        Returns (snapshot, per-slot p matrices) ready for verification.
+
+        p matrices are float32 (the warped logits' native dtype) and cast to
+        float64 only at the verifier boundary in step() — no dense float64
+        (n_nodes, vocab) allocations per stream per step."""
         snapshot = self.tpool.cache
         structs = {s: delayed_structure(trees[s]) for s in active}
-        p_host = {s: np.zeros((trees[s].n_nodes, trees[s].vocab)) for s in active}
-        work = snapshot
+        p_host = {s: np.zeros((trees[s].n_nodes, trees[s].vocab), np.float32)
+                  for s in active}
         groups = defaultdict(list)
         for s in active:
             trunk, _, _ = structs[s]
             groups[1 + len(trunk)].append(s)
+        trims, trunk_rows = [], []
         for L, rows in sorted(groups.items()):
             toks = np.zeros((len(rows), L), np.int32)
             for i, s in enumerate(rows):
@@ -453,7 +515,8 @@ class BatchedSpeculativeEngine:
             sub = gather_streams(snapshot, rows_p)
             fn = self._jit(f"tgt_trunk_g{L}", partial(forward, cfg=self.tc, mode="decode"))
             logits, sub, _ = fn(self.tp, tokens=jnp.asarray(toks_p), cache=sub)
-            work = scatter_streams(work, sub, rows_p)
+            trims.append(gather_streams(sub, list(range(len(rows)))))
+            trunk_rows.extend(rows)
             w = np.asarray(self._warp(logits))
             for i, s in enumerate(rows):
                 trunk, _, _ = structs[s]
@@ -462,6 +525,9 @@ class BatchedSpeculativeEngine:
                     p_host[s][v] = w[i, 1 + j]
             self.counters["target_calls"] += 1
             self.counters["target_tokens"] += L * len(rows)
+        # one write-back of all trunk-advanced rows (snapshot stays intact —
+        # it is the commit checkpoint)
+        work = self._scatter_rows(snapshot, trims, trunk_rows, donate=False)
 
         has_branches = [s for s in active if structs[s][2]]
         if has_branches and Kp:
@@ -494,12 +560,14 @@ class BatchedSpeculativeEngine:
 
     def _commit_replay(self, active, snapshot, accepted_by_slot):
         """Restore the checkpoint and re-advance each stream along
-        [root] + accepted, grouped by commit length."""
-        new_pool = snapshot
+        [root] + accepted (grouped by commit length), then write every row
+        back with ONE donated scatter — the replay strategy's single fused
+        commit write per step."""
         hid_last = {}
         groups = defaultdict(list)
         for s in active:
             groups[1 + len(accepted_by_slot[s])].append(s)
+        trims, all_rows = [], []
         for L, rows in sorted(groups.items()):
             toks = np.zeros((len(rows), L), np.int32)
             for i, s in enumerate(rows):
@@ -510,11 +578,17 @@ class BatchedSpeculativeEngine:
             sub = gather_streams(snapshot, rows_p)
             fn = self._jit(f"tgt_commit_g{L}", partial(forward, cfg=self.tc, mode="decode"))
             _, sub, ex = fn(self.tp, tokens=jnp.asarray(toks_p), cache=sub)
-            new_pool = scatter_streams(new_pool, sub, rows_p)
+            trims.append(gather_streams(sub, list(range(len(rows)))))
+            all_rows.extend(rows)
             hid = np.asarray(ex["hidden"])
             for i, s in enumerate(rows):
                 hid_last[s] = hid[i, L - 1]
-        self.tpool.cache = new_pool
+        t0 = time.perf_counter()
+        self.tpool.cache = self._scatter_rows(snapshot, trims, all_rows, donate=True)
+        if self.profile_commits:
+            jax.block_until_ready(self.tpool.cache)
+        self.counters["commit_calls"] += 1
+        self.counters["commit_ms"] += (time.perf_counter() - t0) * 1e3
         return hid_last
 
     # ---------------------------------------------------------------- step ---
@@ -556,26 +630,33 @@ class BatchedSpeculativeEngine:
         events = []
         if self.strategy == "tree":
             p_all, hid_all = self._target_tree_pass(active, trees, Tpad)
+            node_paths, accepted_by_slot, corr_by_slot = {}, {}, {}
             for s in active:
                 tree = trees[s]
                 n = tree.n_nodes
                 tree.p = p_all[s, :n].astype(np.float64)
-                st = self.streams[s]
-                accepted, corr = verify_tree(tree, self.ecfg.verifier, st["rng"])
-                node_path = SpeculativeEngine._accepted_nodes(tree, accepted)
-                C = len(st["committed"]) - 1
-                self._commit_tree_row(s, C, node_path, Tpad)
+                accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
+                accepted_by_slot[s] = accepted
+                corr_by_slot[s] = int(corr)
+                node_paths[s] = SpeculativeEngine._accepted_nodes(tree, accepted)
+            # every row's ring compaction in one jitted, donated pass
+            self._commit_tree_batch(active, node_paths, Tpad)
+            for s in active:
+                node_path = node_paths[s]
                 last_node = node_path[-1] if node_path else 0
-                st["h_prev_p"] = hid_all[s, last_node]
+                self.streams[s]["h_prev_p"] = hid_all[s, last_node]
                 events.append(
-                    self._advance_stream(s, tree, accepted, int(corr), hq[s], node_path)
+                    self._advance_stream(s, trees[s], accepted_by_slot[s],
+                                         corr_by_slot[s], hq[s], node_path)
                 )
         else:
             snapshot, p_host = self._target_replay(active, trees, acts, Kp)
             accepted_by_slot, corr_by_slot = {}, {}
             for s in active:
                 tree = trees[s]
-                tree.p = p_host[s]
+                # verifier boundary: the float32 scores become the float64
+                # p-matrix the host verifiers consume
+                tree.p = p_host[s].astype(np.float64)
                 accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
                 accepted_by_slot[s] = accepted
                 corr_by_slot[s] = int(corr)

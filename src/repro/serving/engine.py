@@ -33,6 +33,7 @@ from repro.core.verify import verify_bv, verify_naive_single, verify_topdown
 from repro.models.cache import fork_streams
 from repro.models.transformer import cache_length, forward, init_cache
 from repro.sampling import warp_logits
+from repro.serving.serve_step import make_pool_commit_step, next_pow2
 
 TOPDOWN = {"nss", "naive", "naivetree", "spectr", "specinfer", "khisti"}
 
@@ -103,9 +104,13 @@ class SpeculativeEngine:
 
     # ------------------------------------------------------------- helpers ---
 
-    def _jit(self, name, fn):
+    def _jit(self, name, fn, donate_argnums=None):
+        """Per-engine jit cache.  ``donate_argnums`` marks pool/cache args
+        whose buffers XLA may update in place (the commit path donates the
+        cache so committing is a lane-move, not a pool copy)."""
         if name not in self._jit_cache:
-            self._jit_cache[name] = jax.jit(fn)
+            kw = {} if donate_argnums is None else {"donate_argnums": donate_argnums}
+            self._jit_cache[name] = jax.jit(fn, **kw)
         return self._jit_cache[name]
 
     def _warp(self, logits):
@@ -311,27 +316,17 @@ class SpeculativeEngine:
 
     def _commit_tree_cache(self, cache, C, node_path, T):
         """Copy accepted tree KVs into contiguous committed slots and
-        invalidate the remaining tree slots."""
-        a = cache["attn"]
-        smax = a["k"].shape[2]
-        tree_slots = (C + np.arange(T)) % smax
-        # destination: committed slots C..C+tau (root at C stays), sources
-        src = [(C + n) % smax for n in node_path]
-        dst = [(C + 1 + j) % smax for j in range(len(node_path))]
-        k, v, pos = a["k"], a["v"], a["pos"]
-        if src:
-            src_i = jnp.asarray(src)
-            dst_i = jnp.asarray(dst)
-            k = k.at[:, :, dst_i].set(k[:, :, src_i])
-            v = v.at[:, :, dst_i].set(v[:, :, src_i])
-        # invalidate every tree slot, then mark committed ones
-        pos = pos.at[jnp.asarray(tree_slots)].set(-1)
-        keep = np.asarray([(C + j) % smax for j in range(1 + len(node_path))])
-        pos = pos.at[jnp.asarray(keep)].set(jnp.asarray(C + np.arange(1 + len(node_path)) - 0, jnp.int32) + 0)
-        new_len = jnp.asarray(C + 1 + len(node_path), jnp.int32)
-        cache = dict(cache)
-        cache["attn"] = {"k": k, "v": v, "pos": pos, "len": new_len}
-        return cache
+        invalidate the remaining tree slots — routed through the same fused
+        primitive as the batched engine (serve_step.make_pool_commit_step):
+        one jitted, cache-donating call per commit instead of eager
+        ``.at[].set`` chains that each copy the whole cache."""
+        P = next_pow2(max(1, len(node_path)))
+        path = np.zeros((P,), np.int32)
+        path[: len(node_path)] = node_path
+        fn = self._jit(
+            f"commit_T{T}_P{P}", make_pool_commit_step(self.tc, T), donate_argnums=0
+        )
+        return fn(cache, jnp.asarray(path), np.int32(len(node_path)), np.int32(C))
 
     # ---------------------------------------------------------------- step ---
 

@@ -7,8 +7,12 @@ tree_serve_step: one speculation block per request — T tree tokens with a
                  pass; used by the benchmarks to price tree passes).
 pool steps:      the continuous-batching forms over a per-stream cache pool
                  (models/cache.py): per-row lengths, padded token counts
-                 masked by ``lens``, and per-row tree topologies — the units
-                 BatchedSpeculativeEngine executes.
+                 masked by ``lens``, per-row tree topologies, and the fused
+                 post-verification commit — the units
+                 BatchedSpeculativeEngine executes.  Per-step host->device
+                 traffic for these is index arrays only: ancestor masks are
+                 composed on device from parent pointers and the commit is
+                 driven by (node_path, path_len, C) tables.
 """
 from __future__ import annotations
 
@@ -16,9 +20,20 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.ops import pool_commit_kv
 from repro.models.cache import merge_streams
 from repro.models.transformer import forward
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n — the shape-bucketing rule shared by both
+    engines (bounds the jit cache under heterogeneous per-stream shapes)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 def make_serve_step(cfg):
@@ -85,16 +100,157 @@ def make_pool_locked_step(cfg):
     return step
 
 
+def device_ancestor_mask(parents: jax.Array) -> jax.Array:
+    """Compose per-row ancestor-or-self masks on device from parent pointers.
+
+    parents: (B, T) int32, parent[b, i] = parent node of i, -1 for the root
+    and for padding nodes (which become isolated roots, exactly the padding
+    convention of the tree pass).  Returns (B, T, T) bool with
+    mask[b, i, j] == True iff j is an ancestor of i or i == j — bit-identical
+    to host-side ``core.trees.tree_ancestor_mask`` per row.
+
+    This keeps the per-step H2D transfer at (B, T) index arrays instead of
+    the dense (B, T, T) mask tensor the host used to rebuild every iteration.
+    T chain-follow iterations bound any tree depth; each is a (B, T, T) OR.
+    """
+    B, T = parents.shape
+    anc0 = jnp.broadcast_to(jnp.eye(T, dtype=bool)[None], (B, T, T))
+    cur0 = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(_, carry):
+        anc, cur = carry
+        nxt = jnp.where(
+            cur >= 0, jnp.take_along_axis(parents, jnp.maximum(cur, 0), axis=1), -1
+        )
+        anc = anc | (jnp.arange(T, dtype=jnp.int32)[None, None, :] == nxt[:, :, None])
+        return anc, nxt
+
+    anc, _ = jax.lax.fori_loop(0, T, body, (anc0, cur0))
+    return anc
+
+
 def make_pool_tree_step(cfg):
-    """(params, pool_cache, tokens (B, Tpad), anc (B, Tpad, Tpad)) ->
-    (logits, cache, hidden).
+    """(params, pool_cache, tokens (B, Tpad), parents (B, Tpad), keep (B,))
+    -> (logits, cache, hidden).
 
     The continuous-batching target pass: per-row tree topologies over a
-    per-stream cache pool.  Padding nodes are isolated roots (anc = self
-    only) — never attended by real nodes and invalidated at commit."""
+    per-stream cache pool.  The ancestor masks are composed on device from
+    parent pointers (device_ancestor_mask) and rows with keep=False are
+    frozen at their exact prior state inside the same jit call, so the host
+    ships only (B, Tpad) index arrays per step.  Padding nodes carry
+    parent = -1 (isolated roots) — never attended by real nodes and
+    invalidated at commit."""
 
-    def tree_step(params, cache, tokens, anc):
+    def tree_step(params, cache, tokens, parents, keep):
+        anc = device_ancestor_mask(parents)
         logits, new_cache, ex = forward(params, cfg, tokens, mode="tree", cache=cache, anc=anc)
-        return logits, new_cache, ex["hidden"]
+        # idle slots must not advance; active rows keep the tree writes the
+        # fused commit relies on
+        return logits, merge_streams(new_cache, cache, keep), ex["hidden"]
 
     return tree_step
+
+
+def make_pool_commit_step(cfg, Tpad: int):
+    """Fused post-verification commit: ONE jitted call re-compacts every
+    stream's accepted path in the KV ring, invalidates its speculative
+    slots and advances its length — O(touched lanes) data movement instead
+    of O(active_streams) full-pool copies.  Jit with ``donate_argnums=0``
+    (both engines do) and XLA updates the pool buffers in place.
+
+    Returned fn: (cache, node_path, path_len, C, active) -> cache
+      node_path (B, P) int32 : accepted tree-node indices per row, padded
+      path_len  (B,)   int32 : number of real entries per row (0 for rows
+                               that accepted nothing, and for idle rows)
+      C         (B,)   int32 : committed target length before the block
+                               (the pending root sits at ring slot C % smax)
+      active    (B,)   bool  : rows that ran a tree pass this iteration;
+                               inactive rows are bit-identical no-ops
+
+    The single-stream lockstep layout is also accepted (node_path (P,),
+    scalar path_len/C, active ignored): the slot math is then shared across
+    the batch axis, mirroring SpeculativeEngine's cache.
+
+    Index contract (models/cache.py "Ring-compaction commit contract"):
+    padded/idle entries are identity copies of the root slot
+    (src == dst == C % smax), which no real entry writes; accepted node
+    indices are strictly increasing with n_j >= j + 1, so a src slot is
+    never an EARLIER entry's dst slot and dst slots are pairwise distinct —
+    the hazard-free property that lets the Pallas kernel's sequential
+    in-place grid read every lane's pre-commit value.
+    """
+    use_pallas = cfg.attention_impl == "pallas"
+    interpret = cfg.kernel_interpret
+
+    def commit(cache, node_path, path_len, C, active=None):
+        a = cache["attn"]
+        k, v, pos = a["k"], a["v"], a["pos"]
+        smax = k.shape[2]
+        P = node_path.shape[-1]
+        j = jnp.arange(P, dtype=jnp.int32)
+        t = jnp.arange(Tpad, dtype=jnp.int32)
+        jj = jnp.arange(P + 1, dtype=jnp.int32)
+        if pos.ndim == 2:  # per-stream pool
+            B = pos.shape[0]
+            bidx = jnp.arange(B)[:, None]
+            valid = j[None, :] < path_len[:, None]
+            root = (C % smax)[:, None]
+            src = jnp.where(valid, (C[:, None] + node_path) % smax, root)
+            dst = jnp.where(valid, (C[:, None] + 1 + j[None, :]) % smax, root)
+            k, v = pool_commit_kv(
+                k, v, src.astype(jnp.int32), dst.astype(jnp.int32),
+                use_pallas=use_pallas, interpret=interpret,
+            )
+            new_pos = pos.at[bidx, (C[:, None] + t[None, :]) % smax].set(-1)
+            keep_valid = jj[None, :] <= path_len[:, None]
+            keep_slots = jnp.where(keep_valid, (C[:, None] + jj[None, :]) % smax, root)
+            keep_vals = jnp.where(keep_valid, C[:, None] + jj[None, :], C[:, None])
+            new_pos = new_pos.at[bidx, keep_slots].set(keep_vals)
+            new_pos = jnp.where(active[:, None], new_pos, pos)
+            new_len = jnp.where(active, C + 1 + path_len, a["len"])
+        else:  # lockstep single-stream cache (shared pos/len tables)
+            valid = j < path_len
+            root = C % smax
+            src = jnp.where(valid, (C + node_path) % smax, root)
+            dst = jnp.where(valid, (C + 1 + j) % smax, root)
+            k = k.at[:, :, dst].set(k[:, :, src])
+            v = v.at[:, :, dst].set(v[:, :, src])
+            new_pos = pos.at[(C + t) % smax].set(-1)
+            keep_valid = jj <= path_len
+            keep_slots = jnp.where(keep_valid, (C + jj) % smax, root)
+            keep_vals = jnp.where(keep_valid, C + jj, C)
+            new_pos = new_pos.at[keep_slots].set(keep_vals)
+            new_len = (C + 1 + path_len).astype(jnp.int32)
+        cache = dict(cache)
+        cache["attn"] = {"k": k, "v": v, "pos": new_pos, "len": new_len}
+        return cache
+
+    return commit
+
+
+def commit_row_reference(cache, slot: int, C: int, node_path, T: int):
+    """PR-1 per-row sequential commit (eager ``.at[].set`` chains): the
+    bit-exactness oracle the fused commit is property-tested and benchmarked
+    against (tests/test_commit_fused.py, benchmarks/commit_bench.py).  Each
+    call materializes a fresh copy of the whole pool — the O(active_streams)
+    cost make_pool_commit_step removes."""
+    a = cache["attn"]
+    smax = a["k"].shape[2]
+    tree_slots = (C + np.arange(T)) % smax
+    src = [(C + n) % smax for n in node_path]
+    dst = [(C + 1 + i) % smax for i in range(len(node_path))]
+    k, v, pos = a["k"], a["v"], a["pos"]
+    if src:
+        src_i = jnp.asarray(src)
+        dst_i = jnp.asarray(dst)
+        k = k.at[:, slot, dst_i].set(k[:, slot, src_i])
+        v = v.at[:, slot, dst_i].set(v[:, slot, src_i])
+    pos = pos.at[slot, jnp.asarray(tree_slots)].set(-1)
+    keep = np.asarray([(C + i) % smax for i in range(1 + len(node_path))])
+    pos = pos.at[slot, jnp.asarray(keep)].set(
+        jnp.asarray(C + np.arange(1 + len(node_path)), jnp.int32)
+    )
+    new_len = a["len"].at[slot].set(C + 1 + len(node_path))
+    cache = dict(cache)
+    cache["attn"] = {"k": k, "v": v, "pos": pos, "len": new_len}
+    return cache
