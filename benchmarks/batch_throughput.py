@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python benchmarks/batch_throughput.py [--arch granite-8b]
         [--batch-sizes 1,4,8] [--max-new 24] [--verifier specinfer]
+        [--ring] [--block-size 64] [--coresidency]
 
 For each batch size N, serves N synthetic requests two ways:
 
@@ -55,8 +56,10 @@ def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
     return outs, time.time() - t0
 
 
-def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
-    eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts))
+def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
+                paged=True, block_size=64):
+    eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts),
+                                   paged=paged, block_size=block_size)
     eng.profile_commits = True  # honest commit_ms: block on the commit op
 
     def workload():
@@ -64,12 +67,60 @@ def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
         outs = eng.run()
         return [outs[r]["tokens"] for r in rids]
 
-    workload()  # warm every shape the workload compiles
-    eng.counters["commit_calls"] = 0
-    eng.counters["commit_ms"] = 0.0
+    # warmup pass doubles as the occupancy probe: it steps manually and
+    # samples pool_occupancy() whenever the used-block peak advances, so the
+    # timed pass below stays free of host polling (the workload repeats
+    # deterministically, so the warmup's peak occupancy is the timed one)
+    for p, sd in zip(prompts, seeds):
+        eng.submit(list(p), max_new=max_new, seed=sd)
+    peak = {"blocks": -1, "occ": {}}
+    while eng.queue or eng.streams:
+        eng.step()
+        occ = eng.pool_occupancy()
+        if occ and occ["target"]["blocks_used"] >= peak["blocks"]:
+            peak = {"blocks": occ["target"]["blocks_used"], "occ": occ}
+    eng.finished.clear()
+    for key in ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak"):
+        eng.counters[key] = 0
     t0 = time.time()
     outs = workload()
-    return outs, time.time() - t0, dict(eng.counters)
+    return outs, time.time() - t0, dict(eng.counters), peak["occ"]
+
+
+def run_coresidency(cfg, tp, dcfg, dp, ecfg, sampling, seed, block_size=16):
+    """The paged pool's headline scenario: 1 long + 7 short streams share an
+    arena strictly smaller than TWO per-stream rings — HBM in which the ring
+    layout could hold at most the long stream alone."""
+    smax = ecfg.max_cache
+    # size the arena from the block size the engine will actually use
+    bs = BatchedSpeculativeEngine.normalize_block_size(smax, block_size)
+    pool_blocks = (2 * smax) // bs - 1  # < 2 rings of HBM
+    eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling, n_slots=8,
+                                   paged=True, block_size=bs, pool_blocks=pool_blocks)
+    rng = np.random.default_rng(seed)
+    long_max = max(16, smax // 2 - 12)  # the long stream spans many blocks
+    eng.submit(rng.integers(0, cfg.vocab, size=12).tolist(), max_new=long_max, seed=seed)
+    for i in range(7):
+        eng.submit(rng.integers(0, cfg.vocab, size=4).tolist(), max_new=4, seed=seed + 1 + i)
+    peak_resident, peak_occ = 0, {}
+    while eng.queue or eng.streams:
+        eng.step()
+        if len(eng.streams) >= peak_resident:
+            peak_resident = len(eng.streams)
+            occ = eng.pool_occupancy()
+            if occ:
+                peak_occ = occ["target"]
+    ring_fit = (pool_blocks * eng.block_size) // smax
+    print(f"\n[coresidency] arena={pool_blocks} blocks x {eng.block_size} tokens "
+          f"(= {pool_blocks * eng.block_size} slots, ring layout fits {ring_fit} "
+          f"stream{'s' if ring_fit != 1 else ''} of Smax={smax})")
+    print(f"  co-resident streams (peak): {peak_resident}  "
+          f"blocks used at peak: {peak_occ.get('blocks_used', '?')}/{pool_blocks}  "
+          f"fragmentation: {peak_occ.get('fragmentation', 0.0):.2f}  "
+          f"reclaimed: {eng.counters['blocks_reclaimed']}  "
+          f"evicted: {eng.counters['evicted']}")
+    assert peak_resident >= 8, "expected the paged pool to co-host all 8 streams"
+    return peak_resident, ring_fit
 
 
 def main(argv=None):
@@ -82,6 +133,12 @@ def main(argv=None):
     ap.add_argument("--L1", type=int, default=1)
     ap.add_argument("--L2", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ring", action="store_true",
+                    help="benchmark the PR-1 per-stream ring pool instead of paged")
+    ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--coresidency", action="store_true",
+                    help="run the long+short co-residency scenario instead of "
+                         "the throughput sweep")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch)
@@ -92,9 +149,15 @@ def main(argv=None):
                         max_cache=256, seed=args.seed)
     sampling = SamplingParams()
 
+    if args.coresidency:
+        run_coresidency(cfg, tp, dcfg, dp, ecfg, sampling, args.seed,
+                        block_size=min(args.block_size, 16))
+        return []
+
     sizes = [int(s) for s in args.batch_sizes.split(",")]
     print(f"arch={args.arch}(smoke) verifier={args.verifier} "
-          f"action=({args.K},{args.L1},{args.L2}) max_new={args.max_new}")
+          f"action=({args.K},{args.L1},{args.L2}) max_new={args.max_new} "
+          f"pool={'ring' if args.ring else f'paged(block={args.block_size})'}")
     print(f"{'batch':>5} {'seq tok/s':>10} {'batched tok/s':>14} {'speedup':>8} {'exact':>6}")
     rows = []
     for n in sizes:
@@ -102,16 +165,25 @@ def main(argv=None):
         seeds = [args.seed + 100 + i for i in range(n)]
         outs_s, dt_s = run_sequential(cfg, tp, dcfg, dp, ecfg, sampling,
                                       prompts, args.max_new, seeds)
-        outs_b, dt_b, counters = run_batched(cfg, tp, dcfg, dp, ecfg, sampling,
-                                             prompts, args.max_new, seeds)
+        outs_b, dt_b, counters, occ = run_batched(
+            cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
+            paged=not args.ring, block_size=args.block_size)
         tok = n * args.max_new
         exact = all(a == b for a, b in zip(outs_s, outs_b))
         rows.append((n, tok / dt_s, tok / dt_b, exact))
         cc = max(counters["commit_calls"], 1)
+        pool = ""
+        if occ:
+            # blocks_peak and blocks_total both describe the TARGET arena
+            # (the engine scopes the peak counter to it)
+            t = occ["target"]
+            pool = (f"   pool: {counters['blocks_peak']}/{t['blocks_total']} blocks peak"
+                    f" (frag {t['fragmentation']:.2f}, reclaimed {counters['blocks_reclaimed']})")
         print(f"{n:>5} {tok / dt_s:>10.2f} {tok / dt_b:>14.2f} "
               f"{dt_s / dt_b:>7.2f}x {'yes' if exact else 'NO':>6}"
               f"   commit: {counters['commit_calls']} calls, "
-              f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)")
+              f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)"
+              f"{pool}")
     if len(rows) > 1:
         first, last = rows[0], rows[-1]
         scale = last[2] / first[2]

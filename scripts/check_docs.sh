@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Docs lint: every code path README.md / docs/*.md cite must resolve to a
+# real file, and the tier-1 command ROADMAP.md documents must match what
+# scripts/tier1.sh actually runs.  Wired into scripts/tier1.sh so the docs
+# cannot drift from the tree.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+python - <<'EOF'
+import os
+import re
+import sys
+
+fail = []
+
+# --- 1. path references in the docs resolve -----------------------------
+docs = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir("docs") if f.endswith(".md")
+)
+# backtick-quoted tokens that look like repo paths: contain a slash or end
+# in a known source suffix; trailing :line / #anchor / CLI tails stripped
+token_re = re.compile(r"`([A-Za-z0-9_./-]+)`")
+suffixes = (".py", ".sh", ".md", ".txt", ".toml")
+for doc in docs:
+    text = open(doc, encoding="utf-8").read()
+    for tok in token_re.findall(text):
+        base = tok.split(":")[0].split("#")[0]
+        if base.startswith(("http", "--")):
+            continue
+        candidates = [base, os.path.join("src", "repro", base)]
+        if base.endswith(suffixes):
+            pass  # file-suffixed tokens are always checked
+        elif "/" in base and any(os.path.isdir(c) for c in candidates):
+            continue  # directory-style tokens: existing dir is enough
+        else:
+            continue  # not a path-shaped token (CLI flags, ratios, ...)
+        if not any(os.path.exists(c) for c in candidates):
+            fail.append(f"{doc}: `{tok}` does not resolve "
+                        f"(tried {', '.join(candidates)})")
+
+# --- 2. ROADMAP's tier-1 command matches scripts/tier1.sh ---------------
+roadmap = open("ROADMAP.md", encoding="utf-8").read()
+tier1 = open("scripts/tier1.sh", encoding="utf-8").read()
+m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", roadmap)
+if not m:
+    fail.append("ROADMAP.md: no `**Tier-1 verify:** `...`` line found")
+else:
+    cmd = m.group(1)
+    core = re.search(r"python -m pytest\S*(?:\s+-\S+)*", cmd)
+    if core is None:
+        fail.append(f"ROADMAP.md: tier-1 command {cmd!r} is not a pytest invocation")
+    elif "python -m pytest -x -q" not in cmd:
+        fail.append(f"ROADMAP.md: tier-1 command {cmd!r} drifted")
+    if "python -m pytest -x -q" not in tier1:
+        fail.append("scripts/tier1.sh no longer runs the ROADMAP tier-1 core "
+                    "command `python -m pytest -x -q`")
+
+if fail:
+    print("check_docs FAILED:")
+    for f in fail:
+        print("  -", f)
+    sys.exit(1)
+print(f"check_docs: {len(docs)} docs OK, tier-1 command in sync")
+EOF

@@ -6,4 +6,5 @@
 #   scripts/tier1.sh -k commit  # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
+scripts/check_docs.sh
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q -m "not slow" "$@"

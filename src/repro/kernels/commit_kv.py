@@ -28,6 +28,10 @@ inside the kernel.
 Layout: k, v (L, B, Smax, Hkv, hd); src, dst (B, P) int32.  The feature
 lanes are reshaped to (Hkv * hd,); real deployments have hd = 128 so the
 lane dim is MXU/VPU aligned.
+
+Paged pools reuse this kernel unchanged: logical slots are translated
+through the block table and the arena is committed as a single-row pool
+(see docs/kernels.md "The paged scatter").
 """
 from __future__ import annotations
 

@@ -12,6 +12,10 @@ a sequential grid walk over KV blocks with VMEM-resident (m, l, acc); the
 wrapper slices row 0 back out).
 
 Layouts: q (BH, 8, D);  k, v (BH, S, D);  lengths (BH, 1) int32 in SMEM.
+
+``paged_decode_attention`` is the block-table variant for the paged KV
+pool: same kernel body, with the K/V index maps chasing a scalar-prefetched
+block table (docs/kernels.md "Block-table attention").
 """
 from __future__ import annotations
 
@@ -59,6 +63,56 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *
     @pl.when(j == nk - 1)
     def _finalize():
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                         *, block, window):
+    del tbl_ref  # consumed by the K/V index maps
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   block_k=block, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_arena, v_arena, tbl, lengths, *, window: int = 0,
+                           interpret: bool = False):
+    """Flash-decode over a paged KV pool: KV streams through the block table.
+
+    q (BH, 8, D); k_arena, v_arena (NBLK, block, D); tbl (BH, max_blocks)
+    int32 physical block ids (pre-clamped — unmapped logical blocks point at
+    the trash block, which in-register validity already excludes because a
+    stream's mapped blocks always cover slots [0, len)); lengths (BH,)
+    int32.  Returns (BH, 8, D).
+
+    Same kernel body as ``decode_attention``: the minor grid axis j is the
+    logical block index, so the streamed iota validity (slot = j*block +
+    lane < length, optionally windowed) is untouched; only the K/V index
+    maps chase the scalar-prefetched table.  Oracle: kernels/ref.py
+    ``paged_gather_kv_ref`` composed with ``decode_attention_ref``."""
+    BH, R, D = q.shape
+    nblk, block = k_arena.shape[0], k_arena.shape[1]
+    nb = tbl.shape[1]
+    kernel = functools.partial(_paged_decode_kernel, block=block, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(BH, nb),
+        in_specs=[
+            pl.BlockSpec((1, R, D), lambda i, j, tbl, lens: (i, 0, 0)),
+            pl.BlockSpec((1, block, D), lambda i, j, tbl, lens: (tbl[i, j], 0, 0)),
+            pl.BlockSpec((1, block, D), lambda i, j, tbl, lens: (tbl[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, D), lambda i, j, tbl, lens: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, R, D), q.dtype),
+        interpret=interpret,
+    )(tbl, lengths.reshape(BH), q, k_arena, v_arena)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "window", "interpret"))

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.tree_attention import tree_attention
+from repro.kernels.decode_attention import decode_attention, paged_decode_attention
+from repro.kernels.tree_attention import paged_tree_attention, tree_attention
 
 
 def pool_commit_kv(k, v, src, dst, *, use_pallas: bool = False, interpret: bool = True):
@@ -69,6 +69,61 @@ def gqa_tree_attention(q, k, v, mask, *, block_k: int = 512, interpret: bool = T
     mb = _pad_to(mb, bk, axis=2)
     out = tree_attention(qf, kf, vf, mb, block_k=bk, interpret=interpret)
     return out.reshape(B, H, Tp, D)[:, :, :T].transpose(0, 2, 1, 3)
+
+
+def _fold_paged_arena(k_arena, v_arena, tbl, H):
+    """Fold KV heads into the arena's block axis so the paged kernels see
+    (Hkv*NBLK, block, hd) arenas and a per-(batch, head) table.
+
+    k_arena, v_arena (NBLK, block, Hkv, hd); tbl (B, max_blocks) with -1 for
+    unmapped (clamped to the trash block here).  Returns (kf, vf, tbl_f)
+    with tbl_f (B*H, max_blocks) — head h of batch b reads physical block
+    kv_head(h)*NBLK + tbl[b, j].  The transpose touches arena bytes once
+    (the arena is the pool's physical footprint, already far smaller than
+    the dense per-stream view the non-paged wrappers materialize)."""
+    NB, block, Hkv, hd = k_arena.shape
+    G = H // Hkv
+    kf = k_arena.transpose(2, 0, 1, 3).reshape(Hkv * NB, block, hd)
+    vf = v_arena.transpose(2, 0, 1, 3).reshape(Hkv * NB, block, hd)
+    kvh = jnp.arange(H, dtype=jnp.int32) // G
+    tbl_f = (kvh[None, :, None] * NB + jnp.clip(tbl, 0)[:, None, :]).reshape(-1, tbl.shape[1])
+    return kf, vf, tbl_f.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gqa_paged_tree_attention(q, k_arena, v_arena, tbl, mask, *, interpret: bool = True):
+    """Engine-layout tree attention over a paged KV pool.
+
+    q (B, T, H, D); k_arena, v_arena (NBLK, block, Hkv, D); tbl
+    (B, max_blocks) int32 (-1 = unmapped); mask (B, T, S) or (1, T, S) bool
+    over logical slots, S = max_blocks*block (unmapped slots carry pos = -1
+    upstream, so the mask is False there).  Returns (B, T, H, D)."""
+    B, T, H, D = q.shape
+    nb, block = tbl.shape[1], k_arena.shape[1]
+    S = nb * block
+    Tp = int(np.ceil(T / 8) * 8)
+    qf = _pad_to(q.transpose(0, 2, 1, 3), 8, axis=2).reshape(B * H, Tp, D)
+    kf, vf, tbl_f = _fold_paged_arena(k_arena, v_arena, tbl, H)
+    mb = jnp.broadcast_to(mask, (B, T, S))
+    mb = _pad_to(mb, 8, axis=1)
+    mb = jnp.broadcast_to(mb[:, None], (B, H, Tp, S)).reshape(B * H, Tp, S)
+    out = paged_tree_attention(qf, kf, vf, tbl_f, mb, interpret=interpret)
+    return out.reshape(B, H, Tp, D)[:, :, :T].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def gqa_paged_decode_attention(q, k_arena, v_arena, tbl, lengths, *, window: int = 0,
+                               interpret: bool = True):
+    """Engine-layout flash-decode over a paged KV pool.
+
+    q (B, 1, H, D); k_arena, v_arena (NBLK, block, Hkv, D); tbl
+    (B, max_blocks) int32; lengths (B,) int32.  Returns (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    qf = jnp.broadcast_to(q.transpose(0, 2, 1, 3), (B, H, 8, D)).reshape(B * H, 8, D)
+    kf, vf, tbl_f = _fold_paged_arena(k_arena, v_arena, tbl, H)
+    lf = jnp.broadcast_to(lengths[:, None], (B, H)).reshape(B * H)
+    out = paged_decode_attention(qf, kf, vf, tbl_f, lf, window=window, interpret=interpret)
+    return out.reshape(B, H, 8, D)[:, :, :1].transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "window", "interpret"))

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package ships with an oracle here: a straight-line
+jnp formulation of the same contract, bit-compared by the property tests
+(tests/test_kernels.py, tests/test_commit_fused.py, tests/test_paged_pool.py)
+and used as the dispatch fallback when ``use_pallas`` is off.  The pattern
+is documented in docs/kernels.md."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -29,6 +35,27 @@ def commit_kv_ref(k, v, src, dst):
     kg = k[:, b, src]
     vg = v[:, b, src]
     return k.at[:, b, dst].set(kg), v.at[:, b, dst].set(vg)
+
+
+def paged_gather_kv_ref(k_arena, v_arena, tbl):
+    """Block-table KV gather oracle for the paged attention kernels.
+
+    k_arena, v_arena: (NBLK, block, Hkv, hd) or (L, NBLK, block, Hkv, hd);
+    tbl: (B, max_blocks) int32 (-1 = unmapped, clamped to the trash block 0).
+    Returns the logical per-stream view (B, max_blocks*block, Hkv, hd)
+    (with a leading L when the arena carries one).  Unmapped lanes hold
+    trash content and must be masked by the caller (pos = -1 slots)."""
+    phys = jnp.clip(tbl, 0)
+    B, nb = phys.shape
+    if k_arena.ndim == 5:  # leading layer axis
+        block = k_arena.shape[2]
+        kd = k_arena[:, phys].reshape((k_arena.shape[0], B, nb * block) + k_arena.shape[3:])
+        vd = v_arena[:, phys].reshape((v_arena.shape[0], B, nb * block) + v_arena.shape[3:])
+        return kd, vd
+    block = k_arena.shape[1]
+    kd = k_arena[phys].reshape((B, nb * block) + k_arena.shape[2:])
+    vd = v_arena[phys].reshape((B, nb * block) + v_arena.shape[2:])
+    return kd, vd
 
 
 def decode_attention_ref(q, k, v, lengths, window: int = 0):

@@ -16,6 +16,10 @@ kernel (DeFT-style); the TPU-native formulation here:
 
 Layouts: q (BH, T, D);  k, v (BH, S, D);  mask (BH, T, S).  The ops.py
 wrapper folds batch x heads and broadcasts GQA groups.
+
+``paged_tree_attention`` is the block-table variant for the paged KV pool:
+same kernel body, with the K/V index maps chasing a scalar-prefetched block
+table (docs/kernels.md "Block-table attention").
 """
 from __future__ import annotations
 
@@ -62,6 +66,56 @@ def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_re
     @pl.when(j == nk - 1)
     def _finalize():
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_tree_attn_kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
+    del tbl_ref  # consumed by the K/V index maps
+    _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_tree_attention(q, k_arena, v_arena, tbl, mask, *, interpret: bool = False):
+    """Block-table tree attention: KV streams straight from the paged arena.
+
+    q (BH, T, D); k_arena, v_arena (NBLK, block, D) — the folded per-head
+    arena; tbl (BH, max_blocks) int32 physical block ids (pre-clamped:
+    unmapped logical blocks point at the trash block and must be masked
+    False); mask (BH, T, S) bool over LOGICAL slots, S = max_blocks*block.
+    Returns (BH, T, D).
+
+    Identical online-softmax body as ``tree_attention``; the only change is
+    the K/V BlockSpec index maps, which chase the scalar-prefetched block
+    table instead of walking logical slots — the grid's minor axis j is the
+    *logical* block index, so the mask (and any iota-derived validity)
+    stays in logical coordinates while HBM reads hit exactly the mapped
+    arena blocks.  Oracle: kernels/ref.py ``paged_gather_kv_ref`` composed
+    with ``tree_attention_ref``."""
+    BH, T, D = q.shape
+    nblk, block = k_arena.shape[0], k_arena.shape[1]
+    nb = tbl.shape[1]
+    assert mask.shape == (BH, T, nb * block), (mask.shape, (BH, T, nb * block))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nb),
+        in_specs=[
+            pl.BlockSpec((1, T, D), lambda i, j, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, block, D), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+            pl.BlockSpec((1, block, D), lambda i, j, tbl: (tbl[i, j], 0, 0)),
+            pl.BlockSpec((1, T, block), lambda i, j, tbl: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, T, D), lambda i, j, tbl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _paged_tree_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), q.dtype),
+        interpret=interpret,
+    )(tbl, q, k_arena, v_arena, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))

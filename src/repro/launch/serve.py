@@ -70,6 +70,15 @@ def main(argv=None):
     ap.add_argument("--streams", type=int, default=0,
                     help="continuous batching: serve through an N-slot cache pool "
                          "(0 = sequential single-stream engine)")
+    ap.add_argument("--block-size", type=int, default=64,
+                    help="paged KV pool block size in tokens (rounded down to "
+                         "the nearest power of two dividing max_cache)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="total arena blocks shared by all streams (0 = "
+                         "ring-equivalent capacity, streams * max_cache/block)")
+    ap.add_argument("--ring", action="store_true",
+                    help="disable the paged KV pool and reserve a full "
+                         "max_cache ring per stream (the PR-1 layout)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -85,7 +94,9 @@ def main(argv=None):
 
     if args.streams:
         eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
-                                       n_slots=args.streams)
+                                       n_slots=args.streams, paged=not args.ring,
+                                       block_size=args.block_size,
+                                       pool_blocks=args.pool_blocks or None)
         t0 = time.time()
         rids = [
             eng.submit(rng.integers(0, cfg.vocab, size=8).tolist(),
@@ -99,11 +110,15 @@ def main(argv=None):
         dt = time.time() - t0
         c = eng.counters
         be = c["accepted"] / max(c["blocks"], 1) + 1
+        pool = "ring" if not eng.paged else (
+            f"paged(block={eng.block_size}, arena={eng.pool_blocks} blocks, "
+            f"peak={c['blocks_peak']} used, reclaimed={c['blocks_reclaimed']})"
+        )
         print(
             f"\n[batched x{args.streams}] verifier={args.verifier} "
             f"({args.K},{args.L1},{args.L2}) block_efficiency={be:.3f} "
             f"target_calls={c['target_calls']} draft_tokens={c['draft_tokens']} "
-            f"evicted={c['evicted']} wall={dt:.1f}s "
+            f"evicted={c['evicted']} pool={pool} wall={dt:.1f}s "
             f"tokens/s(cpu)={sum(len(o['tokens']) for o in outs.values()) / dt:.2f}"
         )
         return

@@ -20,7 +20,27 @@ Layout (leading layer axis L, scanned):
     ssm:   state: (L, B, H, P, N); conv: (L, B, K-1, C);  len: () or (B,)
     rglru: state: (L, B, D); conv: (L, B, 3, D);          len: () or (B,)
 
-Ring-compaction commit contract (serving/serve_step.make_pool_commit_step):
+Paged layout (``init_paged_attn_cache``): KV storage is a global arena of
+fixed-size blocks shared by every stream,
+
+    attn:  k, v: (L, NBLK, block, Hkv, hd) arena;
+           block_tbl: (B, max_blocks) int32 physical block id, -1 unmapped;
+           pos: (B, Smax) int32;  len: (B,) int32,   Smax = max_blocks*block
+
+so a stream's *logical* ring of Smax slots is an indirection over arena
+blocks: logical slot s lives at arena lane (block_tbl[b, s // block],
+s % block).  Physical block 0 is reserved as the TRASH block: unmapped
+table entries clamp to it, so writes through an unmapped (or idle-row)
+table land in lanes no mask ever admits — pos stays -1 for unmapped
+logical slots, and masked lanes contribute exact zeros to softmax sums
+regardless of content.  This makes the paged pool *token-identical* to the
+per-stream ring with the same Smax while HBM holds only the blocks streams
+actually map (long and short streams co-resident; eviction = block
+recycling).  See docs/serving.md for the lifecycle and docs/kernels.md
+for the kernel-facing contracts.
+
+Ring-compaction commit contract (serving/serve_step.make_pool_commit_step;
+documented in full in docs/kernels.md):
 a tree pass appends a block of Tpad speculative tokens at slots
 (C + t) % Smax for t = 0..Tpad-1, where C is the row's committed length
 before the block (so the pending root token sits at slot C % Smax).
@@ -40,12 +60,18 @@ EARLIER entry's destination (n_j = i + 1 needs i >= j) and destinations
 are pairwise distinct: every entry reads its pre-commit value, making the
 sequential in-place copy (kernels/commit_kv.py) exactly gather-then-
 scatter.  Ragged paths pad with identity copies of the root slot, which
-no real entry writes.
+no real entry writes.  Under paging the same contract holds after
+translating logical slots through the block table: rows own disjoint
+physical blocks, so the concatenated per-row index lists stay hazard-free
+(idle/padding entries translate into the trash block, still src == dst).
 """
 from __future__ import annotations
 
+import heapq
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def init_attn_cache(cfg, n_layers: int, batch: int, smax: int, dtype, per_stream: bool = False):
@@ -56,6 +82,73 @@ def init_attn_cache(cfg, n_layers: int, batch: int, smax: int, dtype, per_stream
         "pos": jnp.full((batch, smax) if per_stream else (smax,), -1, jnp.int32),
         "len": jnp.zeros((batch,) if per_stream else (), jnp.int32),
     }
+
+
+TRASH_BLOCK = 0  # physical arena block 0: the write sink for unmapped table entries
+
+
+def init_paged_attn_cache(cfg, n_layers: int, batch: int, n_blocks: int, block: int,
+                          smax: int, dtype):
+    """Paged attention cache: a block arena + per-stream block tables.
+
+    ``n_blocks`` counts *usable* blocks; one extra trash block (physical id
+    0) is always allocated, so the arena holds n_blocks + 1 blocks of
+    ``block`` slots each.  ``smax`` is the per-stream logical capacity and
+    must be a multiple of ``block`` (max_blocks = smax // block table
+    columns)."""
+    assert smax % block == 0, (smax, block)
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, n_blocks + 1, block, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_layers, n_blocks + 1, block, cfg.n_kv_heads, hd), dtype),
+        "block_tbl": jnp.full((batch, smax // block), -1, jnp.int32),
+        "pos": jnp.full((batch, smax), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def is_paged(cache: dict) -> bool:
+    """True when the cache's attention component is block-table indirect."""
+    return "attn" in cache and "block_tbl" in cache["attn"]
+
+
+def paged_phys_slots(tbl: jax.Array, slots: jax.Array, block: int) -> jax.Array:
+    """Translate logical ring slots to flat arena lane indices.
+
+    tbl (B, max_blocks) int32; slots (B, T) logical.  Unmapped entries clamp
+    to the trash block, so callers may write through them unconditionally."""
+    blk = jnp.take_along_axis(tbl, slots // block, axis=1)
+    return jnp.clip(blk, 0) * block + slots % block
+
+
+def paged_append_layer_kv(k_arena, v_arena, k_new, v_new, slots, tbl):
+    """Per-layer paged KV write.  k_arena: (NBLK, block, Hkv, hd);
+    k_new: (B, T, Hkv, hd); slots: (B, T) logical; tbl: (B, max_blocks)."""
+    nb, block = k_arena.shape[0], k_arena.shape[1]
+    phys = paged_phys_slots(tbl, slots, block).reshape(-1)
+    kf = k_arena.reshape((nb * block,) + k_arena.shape[2:])
+    vf = v_arena.reshape((nb * block,) + v_arena.shape[2:])
+    kf = kf.at[phys].set(k_new.reshape((-1,) + k_new.shape[2:]).astype(kf.dtype))
+    vf = vf.at[phys].set(v_new.reshape((-1,) + v_new.shape[2:]).astype(vf.dtype))
+    return kf.reshape(k_arena.shape), vf.reshape(v_arena.shape)
+
+
+def paged_layer_view(k_arena, v_arena, tbl):
+    """Materialize the logical (B, Smax, Hkv, hd) view of one layer's arena.
+
+    Unmapped blocks read the trash block — garbage lanes, but every one of
+    them carries pos = -1 so no attention mask admits them (their softmax
+    contribution is exactly zero, preserving bit-identity with the dense
+    per-stream ring).  The Pallas kernels (kernels/tree_attention.py,
+    kernels/decode_attention.py) stream blocks through the table instead of
+    materializing this view; kernels/ref.py `paged_gather_kv_ref` is the
+    shared oracle."""
+    phys = jnp.clip(tbl, 0)  # (B, max_blocks)
+    B, nb = phys.shape
+    block = k_arena.shape[1]
+    kd = k_arena[phys].reshape((B, nb * block) + k_arena.shape[2:])
+    vd = v_arena[phys].reshape((B, nb * block) + v_arena.shape[2:])
+    return kd, vd
 
 
 def cache_slots(length: jax.Array, T: int, smax: int) -> jax.Array:
@@ -164,21 +257,77 @@ def _walk(cache, other, fn):
     return out
 
 
+def _paged_gather_attn(attn: dict, rows: jax.Array) -> dict:
+    """Materialize selected paged rows as a DENSE per-stream attn cache
+    (k/v (L, R, Smax, Hkv, hd)) — the bridge that lets paged pools feed the
+    row-sized dense sub-caches the engines' grouped forwards consume."""
+    tblr = jnp.take(attn["block_tbl"], rows, axis=0)  # (R, nb)
+    phys = jnp.clip(tblr, 0)
+    block = attn["k"].shape[2]
+    R, nb = phys.shape
+    kd = attn["k"][:, phys].reshape((attn["k"].shape[0], R, nb * block) + attn["k"].shape[3:])
+    vd = attn["v"][:, phys].reshape((attn["v"].shape[0], R, nb * block) + attn["v"].shape[3:])
+    return {"k": kd, "v": vd, "pos": jnp.take(attn["pos"], rows, axis=0),
+            "len": jnp.take(attn["len"], rows, axis=0)}
+
+
+def _paged_scatter_attn(attn: dict, rows_attn: dict, slots: jax.Array) -> dict:
+    """Write dense per-stream rows back through the block tables.  Content
+    of logical blocks a row has not mapped lands in the trash block (the
+    only lanes multiple rows may target — last writer wins, never read
+    unmasked)."""
+    tblr = jnp.take(attn["block_tbl"], slots, axis=0)  # (R, nb)
+    phys = jnp.clip(tblr, 0)
+    R, nb = phys.shape
+    block = attn["k"].shape[2]
+    k, v = attn["k"], attn["v"]
+    kr = rows_attn["k"].reshape((k.shape[0], R, nb, block) + k.shape[3:]).astype(k.dtype)
+    vr = rows_attn["v"].reshape((v.shape[0], R, nb, block) + v.shape[3:]).astype(v.dtype)
+    return {
+        "k": k.at[:, phys].set(kr),
+        "v": v.at[:, phys].set(vr),
+        "pos": attn["pos"].at[slots].set(rows_attn["pos"].astype(attn["pos"].dtype)),
+        "len": attn["len"].at[slots].set(rows_attn["len"].astype(attn["len"].dtype)),
+        "block_tbl": attn["block_tbl"],
+    }
+
+
+def _split_attn(cache: dict):
+    return cache["attn"], {key: val for key, val in cache.items() if key != "attn"}
+
+
 def fork_streams(cache: dict, K: int) -> dict:
     """Replicate every stream row K times along its stream axis (row b maps
-    to rows b*K .. b*K+K-1).  Lockstep pos/len are shared, not replicated."""
+    to rows b*K .. b*K+K-1).  Lockstep pos/len are shared, not replicated.
+
+    A paged cache is first materialized to its dense per-stream view: forked
+    branches write independent speculative KV, which a shared arena cannot
+    hold (the forks would collide in the parent's blocks)."""
+    if is_paged(cache):
+        cache = gather_streams(cache, jnp.arange(cache["attn"]["len"].shape[0]))
     return _walk(cache, None, lambda a, _, ax: a if ax is None else jnp.repeat(a, K, axis=ax))
 
 
 def gather_streams(cache: dict, rows) -> dict:
-    """Select stream rows (a smaller cache over ``rows``, in order)."""
+    """Select stream rows (a smaller cache over ``rows``, in order).
+
+    Paged caches come back DENSE (per-stream rings over the rows' logical
+    views): the result is a normal row-sized cache any forward can consume,
+    and ``scatter_streams`` writes it back through the block tables."""
     rows = jnp.asarray(rows)
+    if is_paged(cache):
+        attn, rest = _split_attn(cache)
+        out = _walk(rest, None, lambda a, _, ax: a if ax is None else jnp.take(a, rows, axis=ax))
+        out["attn"] = _paged_gather_attn(attn, rows)
+        return out
     return _walk(cache, None, lambda a, _, ax: a if ax is None else jnp.take(a, rows, axis=ax))
 
 
 def scatter_streams(pool: dict, rows_cache: dict, slots) -> dict:
     """Write ``rows_cache`` stream rows into ``pool`` at ``slots`` (list of
-    pool row indices, one per rows_cache row)."""
+    pool row indices, one per rows_cache row).  A paged pool takes dense
+    per-stream rows (the ``gather_streams`` layout) and routes them through
+    its block tables."""
     slots = jnp.asarray(slots)
 
     def put(dst, src, ax):
@@ -188,6 +337,12 @@ def scatter_streams(pool: dict, rows_cache: dict, slots) -> dict:
         src_m = jnp.moveaxis(src, ax, 0).astype(dst_m.dtype)
         return jnp.moveaxis(dst_m.at[slots].set(src_m), 0, ax)
 
+    if is_paged(pool):
+        attn, rest = _split_attn(pool)
+        rows_attn, rows_rest = _split_attn(rows_cache)
+        out = _walk(rest, rows_rest, put)
+        out["attn"] = _paged_scatter_attn(attn, rows_attn, slots)
+        return out
     return _walk(pool, rows_cache, put)
 
 
@@ -214,7 +369,13 @@ def concat_streams(caches: list[dict]) -> dict:
 def merge_streams(new: dict, old: dict, keep) -> dict:
     """Per-stream select: row b of the result is ``new``'s where keep[b],
     else ``old``'s.  The freeze primitive of padded lockstep stepping: rows
-    whose stream has no real token this step keep their exact prior state."""
+    whose stream has no real token this step keep their exact prior state.
+
+    Paged attn arenas have no stream axis, so the freeze works at block
+    granularity: a physical block takes ``new``'s content iff a keep=True
+    row maps it (block tables are pairwise disjoint, so ownership is
+    unambiguous; blocks owned by frozen rows, free blocks and the trash
+    block keep ``old``'s lanes)."""
     keep = jnp.asarray(keep)
 
     def sel(n, o, ax):
@@ -224,6 +385,26 @@ def merge_streams(new: dict, old: dict, keep) -> dict:
         shape[ax] = keep.shape[0]
         return jnp.where(keep.reshape(shape), n, o)
 
+    if is_paged(new):
+        attn_n, rest_n = _split_attn(new)
+        attn_o, rest_o = _split_attn(old)
+        out = _walk(rest_n, rest_o, sel)
+        tbl = attn_n["block_tbl"]
+        nblk = attn_n["k"].shape[1]
+        owned = (
+            jnp.zeros((nblk,), jnp.int32)
+            .at[jnp.clip(tbl, 0)]
+            .add((keep[:, None] & (tbl >= 0)).astype(jnp.int32))
+        ) > 0
+        bsel = owned[None, :, None, None, None]
+        out["attn"] = {
+            "k": jnp.where(bsel, attn_n["k"], attn_o["k"]),
+            "v": jnp.where(bsel, attn_n["v"], attn_o["v"]),
+            "pos": jnp.where(keep[:, None], attn_n["pos"], attn_o["pos"]),
+            "len": jnp.where(keep, attn_n["len"], attn_o["len"]),
+            "block_tbl": jnp.where(keep[:, None], tbl, attn_o["block_tbl"]),
+        }
+        return out
     return _walk(new, old, sel)
 
 
@@ -255,8 +436,187 @@ class CachePool:
         self._free.append(slot)
         self._free.sort()
 
-    def admit(self, row_cache: dict) -> int:
+    def admit(self, row_cache: dict, ctx_len: int = 0) -> int:
         """Scatter a freshly prefilled 1-row per-stream cache into a free slot."""
         slot = self.acquire()
         self.cache = scatter_streams(self.cache, row_cache, [slot])
         return slot
+
+
+class PagedCachePool(CachePool):
+    """Paged slot pool: the CachePool API over a block arena.
+
+    On top of the row bookkeeping, streams own *blocks* from a shared free
+    list (physical block 0 is the permanent trash block and is never handed
+    out).  The host mirrors the block tables so allocation decisions never
+    read device memory; every table change pushes one tiny (n_slots,
+    max_blocks) int32 array.
+
+    Lifecycle (see docs/serving.md):
+      * ``admit(row, ctx_len)`` maps enough blocks for the prefilled
+        context, then scatters the dense row through the table;
+      * ``ensure(slot, upto)`` maps any unmapped logical blocks covering
+        slots [0, upto) — called by the engine before each step's writes;
+      * ``reclaim_tail(slot, keep_upto)`` unmaps blocks wholly past a
+        stream's live frontier (their pos lanes are already -1 from the
+        last commit's invalidation; reset defensively anyway) — the
+        paged replacement for whole-stream cache-pressure eviction;
+      * ``release(slot)`` returns every block to the free list.
+    """
+
+    def __init__(self, cache: dict, n_slots: int):
+        super().__init__(cache, n_slots)
+        assert is_paged(cache), "PagedCachePool needs a paged attn cache"
+        attn = cache["attn"]
+        self.block = int(attn["k"].shape[2])
+        self.max_blocks = int(attn["block_tbl"].shape[1])
+        self.total_blocks = int(attn["k"].shape[1]) - 1  # minus trash
+        self._tbl = np.full((n_slots, self.max_blocks), -1, np.int32)
+        # min-heap: allocation is deterministic lowest-id-first at O(log F)
+        self._free_blocks = list(range(1, self.total_blocks + 1))
+        self._pending_pos: dict[int, int] = {}  # deferred pos resets (reclaim_tails)
+
+    # ------------------------------------------------------------ queries ---
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.total_blocks - len(self._free_blocks)
+
+    def blocks_for(self, upto: int) -> int:
+        """Logical blocks covering slots [0, upto)."""
+        return min(-(-max(upto, 0) // self.block), self.max_blocks)
+
+    def missing_blocks(self, slot: int, upto: int) -> int:
+        """How many of the blocks covering [0, upto) row ``slot`` has yet to map."""
+        need = self.blocks_for(upto)
+        return int(np.sum(self._tbl[slot, :need] < 0))
+
+    def occupancy(self, frontiers=None) -> dict:
+        """Arena counters for benchmarks: blocks used/free and internal
+        fragmentation (mapped slots holding no live token, as a fraction of
+        mapped slots).  ``frontiers`` maps row -> live slot count."""
+        used = self.used_blocks
+        frag = 0.0
+        if frontiers and used:
+            mapped = sum(int(np.sum(self._tbl[s] >= 0)) for s in frontiers) * self.block
+            live = sum(min(f, self.max_blocks * self.block) for f in frontiers.values())
+            frag = max(0.0, 1.0 - live / mapped) if mapped else 0.0
+        return {"blocks_total": self.total_blocks, "blocks_used": used,
+                "blocks_free": self.free_blocks, "block_size": self.block,
+                "fragmentation": frag}
+
+    # --------------------------------------------------------- allocation ---
+
+    def _sync_tbl(self) -> None:
+        cache = dict(self.cache)
+        cache["attn"] = dict(cache["attn"])
+        cache["attn"]["block_tbl"] = jnp.asarray(self._tbl)
+        self.cache = cache
+
+    def ensure(self, slot: int, upto: int, sync: bool = True) -> bool:
+        """Map every unmapped logical block covering slots [0, upto).
+        Returns False (mapping nothing further) once the free list runs dry —
+        the caller reclaims tails or evicts, then retries.  ``sync=False``
+        defers the device table push (use ``ensure_rows`` to batch)."""
+        need = self.blocks_for(upto)
+        idx = [i for i in range(need) if self._tbl[slot, i] < 0]
+        if len(idx) > len(self._free_blocks):
+            return False
+        if idx:
+            for i in idx:
+                self._tbl[slot, i] = heapq.heappop(self._free_blocks)
+            if sync:
+                self._sync_tbl()
+        return True
+
+    def ensure_rows(self, frontiers: dict) -> bool:
+        """Map every row's frontier ({slot: upto}) with ONE device table
+        push — the per-step form (one H2D regardless of how many rows cross
+        a block boundary).  All-or-nothing per row, like ``ensure``."""
+        ok = True
+        for slot, upto in frontiers.items():
+            ok = self.ensure(slot, upto, sync=False) and ok
+        self._sync_tbl()
+        return ok
+
+    def _reset_pos_tails(self, starts: dict) -> None:
+        """Set pos[slot, start:] = -1 for every {slot: start} in one
+        gather/where/scatter round instead of one dispatch per row."""
+        if not starts:
+            return
+        rows = np.fromiter(starts.keys(), np.int32)
+        st = np.fromiter((starts[r] for r in rows), np.int32)
+        attn = dict(self.cache["attn"])
+        smax = attn["pos"].shape[1]
+        dead = jnp.asarray(np.arange(smax)[None, :] >= st[:, None])
+        rows_j = jnp.asarray(rows)
+        attn["pos"] = attn["pos"].at[rows_j].set(
+            jnp.where(dead, -1, attn["pos"][rows_j]))
+        cache = dict(self.cache)
+        cache["attn"] = attn
+        self.cache = cache
+
+    def reclaim_tail(self, slot: int, keep_upto: int, sync: bool = True) -> int:
+        """Unmap mapped blocks wholly past the row's live frontier and
+        return them to the free list.  The freed logical slots' pos lanes
+        are reset to -1 (they already are after any commit — the reset
+        guards direct pool mutations in tests).  ``sync=False`` defers both
+        the table push and the pos reset (``reclaim_tails`` batches them)."""
+        first = self.blocks_for(keep_upto)
+        freed = [i for i in range(first, self.max_blocks) if self._tbl[slot, i] >= 0]
+        if not freed:
+            return 0
+        for i in freed:
+            heapq.heappush(self._free_blocks, int(self._tbl[slot, i]))
+            self._tbl[slot, i] = -1
+        if sync:
+            self._sync_tbl()
+            self._reset_pos_tails({slot: freed[0] * self.block})
+        else:
+            self._pending_pos[slot] = min(freed[0] * self.block,
+                                          self._pending_pos.get(slot, 1 << 30))
+        return len(freed)
+
+    def reclaim_tails(self, frontiers: dict) -> int:
+        """Batched ``reclaim_tail`` over {slot: keep_upto}: one device table
+        push and one pos-reset round for the whole sweep."""
+        self._pending_pos = {}
+        freed = sum(self.reclaim_tail(s, keep, sync=False) for s, keep in frontiers.items())
+        if freed:
+            self._sync_tbl()
+            self._reset_pos_tails(self._pending_pos)
+        self._pending_pos = {}
+        return freed
+
+    def release(self, slot: int) -> None:
+        owned = self._tbl[slot][self._tbl[slot] >= 0]
+        if owned.size:
+            for b in owned:
+                heapq.heappush(self._free_blocks, int(b))
+            self._tbl[slot] = -1
+            self._sync_tbl()
+        super().release(slot)
+
+    def admit(self, row_cache: dict, ctx_len: int = 0) -> int:
+        """Acquire a row, map blocks for the prefilled context, scatter the
+        dense row through the table.  Callers gate on ``free_blocks`` first;
+        an exhausted free list here is a scheduling bug."""
+        slot = self.acquire()
+        if not self.ensure(slot, ctx_len):
+            super().release(slot)
+            raise RuntimeError(
+                f"paged pool out of blocks admitting a {ctx_len}-token context "
+                f"({self.free_blocks} free)"
+            )
+        self.cache = scatter_streams(self.cache, row_cache, [slot])
+        return slot
+
+
+def make_cache_pool(cache: dict, n_slots: int) -> CachePool:
+    """Pool factory: paged pools for paged caches, ring pools otherwise
+    (pure-recurrent caches have no attn component to page)."""
+    return PagedCachePool(cache, n_slots) if is_paged(cache) else CachePool(cache, n_slots)

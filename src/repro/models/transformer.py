@@ -23,6 +23,9 @@ from repro.models.cache import (
     attn_mask_from_pos,
     cache_slots,
     init_attn_cache,
+    init_paged_attn_cache,
+    paged_append_layer_kv,
+    paged_layer_view,
     tree_mask_from_pos,
 )
 from repro.models.layers import (
@@ -150,23 +153,39 @@ def init_params(cfg, key) -> dict:
 
 
 def _self_attention(p, cfg, x, positions, mask, layer_cache, window):
-    """Shared attention sub-block.  layer_cache: None or (k, v, slots)."""
+    """Shared attention sub-block.  layer_cache: None or (k, v, slots, page)
+    with page = None (dense cache) or the (B, max_blocks) block table of a
+    paged pool (models/cache.py paged layout)."""
     B, T, _ = x.shape
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = project_qkv(p["attn"], cfg, h)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     new_kv = None
+    page_tbl = None
     if layer_cache is not None:
-        kc, vc, slots = layer_cache
-        kc, vc = append_layer_kv(kc, vc, k, v, slots)
-        k, v = kc, vc
+        kc, vc, slots, page_tbl = layer_cache
+        if page_tbl is None:
+            kc, vc = append_layer_kv(kc, vc, k, v, slots)
+            k, v = kc, vc
+        else:
+            kc, vc = paged_append_layer_kv(kc, vc, k, v, slots, page_tbl)
+            if not (cfg.attention_impl == "pallas" and mask is not None):
+                # XLA reference path: materialize the logical per-stream view
+                # (unmapped lanes masked by pos = -1 upstream)
+                k, v = paged_layer_view(kc, vc, page_tbl)
         new_kv = (kc, vc)
     if cfg.attention_impl == "pallas" and mask is not None:
-        from repro.kernels.ops import gqa_tree_attention
-
         m3 = mask[:, 0] if mask.ndim == 4 else mask
-        att = gqa_tree_attention(q, k, v, m3, interpret=cfg.kernel_interpret)
+        if page_tbl is not None:
+            from repro.kernels.ops import gqa_paged_tree_attention
+
+            att = gqa_paged_tree_attention(q, kc, vc, page_tbl, m3,
+                                           interpret=cfg.kernel_interpret)
+        else:
+            from repro.kernels.ops import gqa_tree_attention
+
+            att = gqa_tree_attention(q, k, v, m3, interpret=cfg.kernel_interpret)
     else:
         att = gqa_attend(q, k, v, mask)
     return x + att.reshape(B, T, -1) @ p["attn"]["wo"], new_kv
@@ -202,6 +221,14 @@ def _rec_block(p, cfg, x, cache):
 
 
 # ---------------------------------------------------------------- forward ----
+
+
+def _attn_cache_out(k, v, pos, length, page_tbl):
+    """Post-scan attn cache dict; paged pools keep their block table."""
+    out = {"k": k, "v": v, "pos": pos, "len": length}
+    if page_tbl is not None:
+        out["block_tbl"] = page_tbl
+    return out
 
 
 
@@ -330,12 +357,16 @@ def forward(
     use_cache = cache is not None
     has_attn = cfg.arch_type != "ssm"
     slots = new_pos = new_len = None
+    page_tbl = None
     mask_full = mask_local = None
     if use_cache and mode == "full":
         mode = "decode"  # prefill == appending T tokens causally to an empty cache
     if has_attn:
         if use_cache and "attn" in cache:
-            smax = cache["attn"]["k"].shape[2]
+            # paged pools keep logical capacity in the pos table; the KV
+            # array's slot axis is the physical block size there
+            page_tbl = cache["attn"].get("block_tbl")
+            smax = cache["attn"]["pos"].shape[-1]
             slots = cache_slots(length, T, smax)
             pos_vals = positions
             if lens is not None:
@@ -366,14 +397,14 @@ def forward(
             pl, lc = per  # lc: None or (k (m,B,S,H,D), v (m,B,S,H,D))
             ks_, vs_ = [], []
             for i in range(m - 1):
-                layer_cache = (lc[0][i], lc[1][i], slots) if lc is not None else None
+                layer_cache = (lc[0][i], lc[1][i], slots, page_tbl) if lc is not None else None
                 h, kv, _ = _attn_mlp_block(
                     pl[f"dense{i}"], cfg, h, positions, mask_full, layer_cache, 0
                 )
                 if kv is not None:
                     ks_.append(kv[0])
                     vs_.append(kv[1])
-            layer_cache = (lc[0][m - 1], lc[1][m - 1], slots) if lc is not None else None
+            layer_cache = (lc[0][m - 1], lc[1][m - 1], slots, page_tbl) if lc is not None else None
             h, kv, aux = _attn_mlp_block(
                 pl["moe"], cfg, h, positions, mask_full, layer_cache, 0, moe=True, train=train
             )
@@ -387,12 +418,11 @@ def forward(
             kc = cache["attn"]["k"].reshape((ng, m) + cache["attn"]["k"].shape[1:])
             vc = cache["attn"]["v"].reshape((ng, m) + cache["attn"]["v"].shape[1:])
             x, (kvs, auxs) = scan(macro_body, x, (params["blocks"], (kc, vc)))
-            new_cache["attn"] = {
-                "k": kvs[0].reshape((cfg.n_layers,) + kvs[0].shape[2:]),
-                "v": kvs[1].reshape((cfg.n_layers,) + kvs[1].shape[2:]),
-                "pos": new_pos,
-                "len": new_len,
-            }
+            new_cache["attn"] = _attn_cache_out(
+                kvs[0].reshape((cfg.n_layers,) + kvs[0].shape[2:]),
+                kvs[1].reshape((cfg.n_layers,) + kvs[1].shape[2:]),
+                new_pos, new_len, page_tbl,
+            )
         else:
             def macro_nc(h, pl):
                 h, (_, aux) = macro_body(h, (pl, None))
@@ -410,7 +440,7 @@ def forward(
             else:
                 pl, lc = per
                 ekv = None
-            layer_cache = (lc[0], lc[1], slots) if lc is not None else None
+            layer_cache = (lc[0], lc[1], slots, page_tbl) if lc is not None else None
             h, new_kv, aux = _attn_mlp_block(
                 pl, cfg, h, positions, mask_full, layer_cache, 0, moe=moe, enc_kv=ekv,
                 train=train,
@@ -424,7 +454,7 @@ def forward(
                 else (params["blocks"], (cache["attn"]["k"], cache["attn"]["v"]))
             )
             x, (kvs, auxs) = scan(body, x, xs)
-            new_cache["attn"] = {"k": kvs[0], "v": kvs[1], "pos": new_pos, "len": new_len}
+            new_cache["attn"] = _attn_cache_out(kvs[0], kvs[1], new_pos, new_len, page_tbl)
             if cfg.arch_type == "encdec" and enc_embeds is not None:
                 new_cache["cross_k"], new_cache["cross_v"] = enc_kv_all
         else:
@@ -492,7 +522,7 @@ def forward(
                 new_states.append(nc["state"])
                 new_convs.append(nc["conv"])
             h, new_kv, _ = _attn_mlp_block(
-                pl["attn"], cfg, h, positions, mask_local, (kc, vc, slots), cfg.local_window
+                pl["attn"], cfg, h, positions, mask_local, (kc, vc, slots, page_tbl), cfg.local_window
             )
             return h, (jnp.stack(new_states), jnp.stack(new_convs), new_kv[0], new_kv[1])
 
@@ -515,7 +545,7 @@ def forward(
                 ),
             )
             new_cache["rec_state"], new_cache["rec_conv"] = sts, cvs
-            new_cache["attn"] = {"k": ks_, "v": vs_, "pos": new_pos, "len": new_len}
+            new_cache["attn"] = _attn_cache_out(ks_, vs_, new_pos, new_len, page_tbl)
         else:
             x, _ = scan(ckpt(group_body_nc), x, params["blocks"])
         if "tail" in params:
@@ -560,20 +590,32 @@ def _tree_depths(anc: jax.Array, per_stream: bool = False) -> jax.Array:
 # ------------------------------------------------------------------ cache ----
 
 
-def init_cache(cfg, batch: int, smax: int, enc_len: int | None = None, per_stream: bool = False) -> dict:
+def init_cache(cfg, batch: int, smax: int, enc_len: int | None = None, per_stream: bool = False,
+               page: tuple[int, int] | None = None) -> dict:
     """Empty decode cache for every architecture family.
 
     smax: attention cache capacity (== window for sliding-window archs; the
     ring buffer makes longer logical contexts fit in window slots).
     per_stream: per-row pos/len tables so batch rows hold independent streams
     (the continuous-batching layout; see models/cache.py).
+    page: (pool_blocks, block_size) — store attention KV as a paged block
+    arena instead of per-stream rings: ``pool_blocks`` usable blocks of
+    ``block_size`` slots shared by all rows through per-row block tables,
+    with ``smax`` staying each row's *logical* capacity (must divide into
+    block_size).  Requires per_stream.  Pure-recurrent caches ignore it.
     """
+    assert page is None or per_stream, "paged caches are per-stream by construction"
     dt = cfg.jdtype
     hd = cfg.hd
+
+    def attn_cache(n_layers):
+        if page is not None:
+            return init_paged_attn_cache(cfg, n_layers, batch, page[0], page[1], smax, dt)
+        return init_attn_cache(cfg, n_layers, batch, smax, dt, per_stream=per_stream)
+
     cache: dict = {"len": jnp.zeros((batch,) if per_stream else (), jnp.int32)}
     if cfg.arch_type in ("dense", "vlm", "moe", "encdec"):
-        c = init_attn_cache(cfg, cfg.n_layers, batch, smax, dt, per_stream=per_stream)
-        cache["attn"] = c
+        cache["attn"] = attn_cache(cfg.n_layers)
         del cache["len"]
         if cfg.arch_type == "encdec":
             el = enc_len or cfg.enc_len
@@ -590,7 +632,7 @@ def init_cache(cfg, batch: int, smax: int, enc_len: int | None = None, per_strea
         dl = cfg.lru_d
         cache["rec_state"] = jnp.zeros((n_groups, g - 1, batch, dl), jnp.float32)
         cache["rec_conv"] = jnp.zeros((n_groups, g - 1, batch, 3, dl), dt)
-        cache["attn"] = init_attn_cache(cfg, n_groups, batch, smax, dt, per_stream=per_stream)
+        cache["attn"] = attn_cache(n_groups)
         if rem:
             cache["tail_state"] = jnp.zeros((rem, batch, dl), jnp.float32)
             cache["tail_conv"] = jnp.zeros((rem, batch, 3, dl), dt)

@@ -21,6 +21,21 @@ recompiles.  Speculation shapes are BUCKETED: per-iteration (K, L1, L2) are
 padded to the next power of two, so the jit cache stays bounded even under
 heterogeneous per-stream NDE selector decisions.
 
+By default the attention KV is PAGED (``paged=True``): instead of reserving
+a full ``max_cache`` ring per slot, KV lives in a shared arena of
+``block_size``-slot blocks indexed through per-stream block tables
+(models/cache.py paged layout), so HBM holds only the blocks streams have
+actually written — one long stream and many short ones co-reside in a pool
+a ring design could not share.  Block pressure is handled in three stages
+before any stream dies: admission is gated on the free list, dead tail
+blocks past each stream's live frontier are recycled
+(``counters["blocks_reclaimed"]``), and only then is the most recently
+admitted stream evicted (LIFO — the oldest streams keep their residency).
+With ``pool_blocks`` left at its default (n_slots * max_cache / block_size,
+i.e. ring-equivalent capacity) scheduling decisions are identical to the
+ring pool and the output is token-identical to it (property-tested in
+tests/test_paged_pool.py).  See docs/serving.md for the full lifecycle.
+
 Exactness contract (property-tested in tests/test_batch_engine.py): with the
 same per-stream seed, the batched engine emits token-identical output to an
 independent ``SpeculativeEngine`` run per stream.  This leans on three facts:
@@ -56,10 +71,11 @@ import numpy as np
 from repro.core.traversal import delayed_structure
 from repro.core.trees import DraftTree
 from repro.models.cache import (
-    CachePool,
+    PagedCachePool,
     concat_streams,
     fork_streams,
     gather_streams,
+    make_cache_pool,
     scatter_streams,
 )
 from repro.models.transformer import forward, init_cache
@@ -101,7 +117,8 @@ class BatchedSpeculativeEngine:
 
     def __init__(self, target_cfg, target_params, draft_cfg, draft_params,
                  ecfg: EngineConfig, sampling: SamplingParams | None = None,
-                 selector=None, n_slots: int = 4):
+                 selector=None, n_slots: int = 4, paged: bool = True,
+                 block_size: int = 64, pool_blocks: int | None = None):
         assert target_cfg.vocab == draft_cfg.vocab
         assert n_slots >= 1, f"need at least one pool slot, got {n_slots}"
         assert target_cfg.arch_type not in ("encdec", "vlm"), \
@@ -122,12 +139,32 @@ class BatchedSpeculativeEngine:
         self.n_slots = n_slots
         self.strategy = "replay" if target_cfg.arch_type in RECURRENT else "tree"
         smax = ecfg.max_cache
-        self.tpool = CachePool(init_cache(target_cfg, n_slots, smax, per_stream=True), n_slots)
-        self.dpool = CachePool(init_cache(draft_cfg, n_slots, smax, per_stream=True), n_slots)
+        page = None
+        if paged:
+            bs = self.normalize_block_size(smax, block_size)
+            self.block_size = bs
+            self.max_blocks = smax // bs
+            if pool_blocks is None:
+                # ring-equivalent capacity: scheduling (admission/eviction)
+                # is then identical to the ring pool, and so is the output
+                pool_blocks = n_slots * self.max_blocks
+            # an arena smaller than one logical ring is legal: streams that
+            # outgrow it are pressure-evicted (submit() rejects prompts that
+            # could never fit at all)
+            assert pool_blocks >= 1, "the arena needs at least one usable block"
+            self.pool_blocks = pool_blocks
+            page = (pool_blocks, bs)
+        self.tpool = make_cache_pool(
+            init_cache(target_cfg, n_slots, smax, per_stream=True, page=page), n_slots)
+        self.dpool = make_cache_pool(
+            init_cache(draft_cfg, n_slots, smax, per_stream=True, page=page), n_slots)
+        # pure-recurrent caches have no attn component to page
+        self.paged = isinstance(self.tpool, PagedCachePool) or isinstance(self.dpool, PagedCachePool)
         self.streams: dict[int, dict] = {}  # slot -> stream state
         self.queue: list[BatchRequest] = []
         self.finished: dict[int, dict] = {}
         self._next_rid = 0
+        self._admit_seq = 0
         self._jit_cache: dict = {}
         self._staging: dict = {}
         # commit_ms times the dispatch only unless profile_commits is set
@@ -136,9 +173,24 @@ class BatchedSpeculativeEngine:
         self.profile_commits = False
         self.counters = {"target_calls": 0, "target_tokens": 0, "draft_calls": 0,
                          "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0,
-                         "commit_calls": 0, "commit_ms": 0.0}
+                         "commit_calls": 0, "commit_ms": 0.0,
+                         "blocks_reclaimed": 0, "admit_blocked": 0, "blocks_peak": 0}
 
     # ------------------------------------------------------------- helpers ---
+
+    @staticmethod
+    def normalize_block_size(smax: int, block_size: int) -> int:
+        """The block size must tile the logical ring exactly: round the
+        request down to a power of two first (48 -> 32), then halve until it
+        divides ``smax`` — so a non-power-of-two request degrades to the
+        nearest sensible block, never to 1-token blocks.  Shared with
+        anything that sizes an arena before constructing the engine
+        (benchmarks/batch_throughput.py)."""
+        bs = max(1, min(block_size, smax))
+        bs = 1 << (bs.bit_length() - 1)
+        while smax % bs:
+            bs //= 2
+        return bs
 
     def _jit(self, name, fn, donate_argnums=None):
         """Per-engine jit cache.  ``donate_argnums`` marks pool args whose
@@ -210,6 +262,16 @@ class BatchedSpeculativeEngine:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens cannot fit a {self.ecfg.max_cache}-slot cache ring"
             )
+        if self.paged:
+            # mirror _admit's gate exactly: a prompt accepted here must be
+            # admittable into an otherwise-empty arena
+            need = self._admit_need(len(prompt))
+            cap = min(p.total_blocks for p in self._paged_pools())
+            if need > cap:
+                raise ValueError(
+                    f"prompt of {len(prompt)} tokens needs {need} blocks "
+                    f"(context + one speculation bucket); the arena has {cap}"
+                )
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(BatchRequest(rid, list(prompt), max_new,
@@ -236,17 +298,53 @@ class BatchedSpeculativeEngine:
                         lens=jnp.asarray([T], jnp.int32))
         return row, np.asarray(ex["hidden"][0, T - 1])
 
+    def _paged_pools(self) -> list[PagedCachePool]:
+        return [p for p in (self.tpool, self.dpool) if isinstance(p, PagedCachePool)]
+
+    def _admit_need(self, prompt_len: int) -> int:
+        """Blocks a fresh stream must find free: its context plus one
+        default-action speculation bucket (step-time pressure handles any
+        selector-driven growth beyond that)."""
+        _, _, _, tpad0 = self._bucket_actions(
+            {0: (self.ecfg.K, self.ecfg.L1, self.ecfg.L2)})
+        return min(-(-(prompt_len + tpad0) // self.block_size), self.max_blocks)
+
     def _admit(self):
         while self.queue and self.tpool.free_slots:
-            req = self.queue.pop(0)
+            req = self.queue[0]
+            if self.paged:
+                need = self._admit_need(len(req.prompt))
+                short = [p for p in self._paged_pools() if p.free_blocks < need]
+                if short:
+                    # recycle resident streams' dead tails (blocks past the
+                    # frontier a default-action step would write) before
+                    # leaving the request queued
+                    _, _, _, tpad0 = self._bucket_actions(
+                        {0: (self.ecfg.K, self.ecfg.L1, self.ecfg.L2)})
+                    keeps = {s: len(st["committed"]) - 1 + tpad0
+                             for s, st in self.streams.items()}
+                    for pool in short:
+                        self.counters["blocks_reclaimed"] += pool.reclaim_tails(keeps)
+                    short = [p for p in self._paged_pools() if p.free_blocks < need]
+                if short:
+                    if not self.streams:
+                        raise RuntimeError(
+                            f"request {req.rid} needs {need} free blocks but the "
+                            f"empty pool only has {min(p.free_blocks for p in short)}"
+                        )
+                    self.counters["admit_blocked"] += 1
+                    break  # FIFO: the head blocks the queue until blocks free up
+            self.queue.pop(0)
             ctx = req.prompt[:-1]
             trow, h_p = self._prefill_row(self.tc, self.tp, ctx, "tgt")
             drow, h_q = self._prefill_row(self.dc, self.dp, ctx, "drf")
-            slot = self.tpool.admit(trow)
-            slot_d = self.dpool.admit(drow)
+            slot = self.tpool.admit(trow, ctx_len=len(ctx))
+            slot_d = self.dpool.admit(drow, ctx_len=len(ctx))
             assert slot == slot_d
+            self._admit_seq += 1
             self.streams[slot] = {
                 "rid": req.rid,
+                "seq": self._admit_seq,
                 "rng": np.random.default_rng(req.seed),
                 "max_new": req.max_new,
                 "out": [],
@@ -335,6 +433,74 @@ class BatchedSpeculativeEngine:
         L2p = _next_pow2(L2m) if L2m else 0
         Kp = _next_pow2(Km) if (L2p and Km) else 0
         return Kp, L1p, L2p, 1 + L1p + Kp * L2p
+
+    def _frontiers(self, active, Tpad, Dp) -> dict[int, int]:
+        """Per-row live slot frontier for this iteration: the tree pass
+        writes Tpad slots from C-1 and the padded ingest Dp slots from C-d
+        (trunk drafting and replay commits stay within the tree extent) —
+        mirror of step()'s logical-capacity eviction bound."""
+        out = {}
+        for s in active:
+            C = len(self.streams[s]["committed"])
+            d = len(self.streams[s]["draft_delta"])
+            out[s] = max(C - 1 + Tpad, C - d + Dp)
+        return out
+
+    def _ensure_pool_blocks(self, active, acts, Tpad, Dp) -> bool:
+        """Map the blocks this step's writes need, in three stages:
+        free-list allocation, dead-tail reclamation (blocks wholly past a
+        row's frontier — e.g. mapped for an earlier, bigger speculation
+        bucket that committed short), then LIFO stream eviction.  Mutates
+        ``active``/``acts`` when it evicts; returns True if it did.
+
+        Tpad/Dp are RE-BUCKETED after every eviction: removing the stream
+        that drove the batch maxima shrinks every survivor's frontier, so
+        one victim's departure must not cascade into further evictions the
+        smaller buckets would have avoided."""
+        evicted = False
+        fr = self._frontiers(active, Tpad, Dp)
+        while active:
+            short = False
+            for pool in self._paged_pools():
+                need = sum(pool.missing_blocks(s, fr[s]) for s in active)
+                if need > pool.free_blocks:
+                    self.counters["blocks_reclaimed"] += pool.reclaim_tails(fr)
+                    need = sum(pool.missing_blocks(s, fr[s]) for s in active)
+                    if need > pool.free_blocks:
+                        short = True
+            if not short:
+                break
+            victim = max(active, key=lambda s: self.streams[s]["seq"])
+            self.counters["evicted"] += 1
+            self._finish(victim, reason="evicted:pool_blocks")
+            active.remove(victim)
+            del acts[victim]
+            evicted = True
+            if active:
+                _, _, _, Tpad = self._bucket_actions(acts)
+                Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
+                fr = self._frontiers(active, Tpad, Dp)
+            else:
+                fr = {}
+        for pool in self._paged_pools():
+            assert pool.ensure_rows(fr), "free list exhausted after the pressure loop"
+        if isinstance(self.tpool, PagedCachePool):
+            # peak is the TARGET arena's occupancy (the HBM that matters);
+            # the draft arena is a proportionally smaller mirror
+            self.counters["blocks_peak"] = max(self.counters["blocks_peak"],
+                                               self.tpool.used_blocks)
+        return evicted
+
+    def pool_occupancy(self) -> dict:
+        """Arena occupancy (blocks used/free, fragmentation) per pool —
+        surfaced by benchmarks/batch_throughput.py next to the commit
+        counters.  Empty for non-paged engines."""
+        fr = {s: len(st["committed"]) for s, st in self.streams.items()}
+        out = {}
+        for name, pool in (("target", self.tpool), ("draft", self.dpool)):
+            if isinstance(pool, PagedCachePool):
+                out[name] = pool.occupancy(fr)
+        return out
 
     def _draft_trees(self, active, acts, q0, pads):
         """Lockstep-draft every stream's (K, L1, L2) delayed tree on a local
@@ -624,6 +790,16 @@ class BatchedSpeculativeEngine:
         # re-bucket: eviction can only shrink the maxima, never grow them
         pads = self._bucket_actions(acts)
         Kp, L1p, L2p, Tpad = pads
+        if self.paged:
+            # map every block this iteration's writes will touch; under
+            # pressure reclaim dead tails first, evict (LIFO) only as a
+            # last resort
+            Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
+            if self._ensure_pool_blocks(active, acts, Tpad, Dp):
+                if not active:
+                    return []
+                pads = self._bucket_actions(acts)
+                Kp, L1p, L2p, Tpad = pads
         q0, hq = self._ingest_deltas(active)
         trees = self._draft_trees(active, acts, q0, pads)
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import pool_commit_kv
-from repro.models.cache import merge_streams
+from repro.models.cache import merge_streams, paged_phys_slots
 from repro.models.transformer import forward
 
 
@@ -171,13 +171,22 @@ def make_pool_commit_step(cfg, Tpad: int):
     scalar path_len/C, active ignored): the slot math is then shared across
     the batch axis, mirroring SpeculativeEngine's cache.
 
-    Index contract (models/cache.py "Ring-compaction commit contract"):
+    Index contract (models/cache.py "Ring-compaction commit contract",
+    documented in full in docs/kernels.md):
     padded/idle entries are identity copies of the root slot
     (src == dst == C % smax), which no real entry writes; accepted node
     indices are strictly increasing with n_j >= j + 1, so a src slot is
     never an EARLIER entry's dst slot and dst slots are pairwise distinct —
     the hazard-free property that lets the Pallas kernel's sequential
     in-place grid read every lane's pre-commit value.
+
+    Paged pools (models/cache.py paged layout) run the same logical-slot
+    arithmetic, then translate src/dst through the per-row block table
+    into flat arena lanes and issue ONE pool_commit_kv over the arena
+    viewed as a single-row pool: rows own disjoint physical blocks, so
+    concatenating every row's entries row-major preserves the hazard-free
+    property (idle/unmapped entries translate into the trash block with
+    src == dst).  pos/len/block_tbl stay logical and untouched by the move.
     """
     use_pallas = cfg.attention_impl == "pallas"
     interpret = cfg.kernel_interpret
@@ -185,22 +194,37 @@ def make_pool_commit_step(cfg, Tpad: int):
     def commit(cache, node_path, path_len, C, active=None):
         a = cache["attn"]
         k, v, pos = a["k"], a["v"], a["pos"]
-        smax = k.shape[2]
+        paged = "block_tbl" in a
+        smax = pos.shape[-1] if pos.ndim == 2 else pos.shape[0]
         P = node_path.shape[-1]
         j = jnp.arange(P, dtype=jnp.int32)
         t = jnp.arange(Tpad, dtype=jnp.int32)
         jj = jnp.arange(P + 1, dtype=jnp.int32)
-        if pos.ndim == 2:  # per-stream pool
+        if pos.ndim == 2:  # per-stream pool (ring or paged)
             B = pos.shape[0]
             bidx = jnp.arange(B)[:, None]
             valid = j[None, :] < path_len[:, None]
             root = (C % smax)[:, None]
             src = jnp.where(valid, (C[:, None] + node_path) % smax, root)
             dst = jnp.where(valid, (C[:, None] + 1 + j[None, :]) % smax, root)
-            k, v = pool_commit_kv(
-                k, v, src.astype(jnp.int32), dst.astype(jnp.int32),
-                use_pallas=use_pallas, interpret=interpret,
-            )
+            if paged:
+                tbl = a["block_tbl"]
+                block = k.shape[2]
+                nl = k.shape[0]
+                srcf = paged_phys_slots(tbl, src, block).reshape(1, -1)
+                dstf = paged_phys_slots(tbl, dst, block).reshape(1, -1)
+                kf = k.reshape((nl, 1, k.shape[1] * block) + k.shape[3:])
+                vf = v.reshape((nl, 1, v.shape[1] * block) + v.shape[3:])
+                kf, vf = pool_commit_kv(
+                    kf, vf, srcf.astype(jnp.int32), dstf.astype(jnp.int32),
+                    use_pallas=use_pallas, interpret=interpret,
+                )
+                k, v = kf.reshape(k.shape), vf.reshape(v.shape)
+            else:
+                k, v = pool_commit_kv(
+                    k, v, src.astype(jnp.int32), dst.astype(jnp.int32),
+                    use_pallas=use_pallas, interpret=interpret,
+                )
             new_pos = pos.at[bidx, (C[:, None] + t[None, :]) % smax].set(-1)
             keep_valid = jj[None, :] <= path_len[:, None]
             keep_slots = jnp.where(keep_valid, (C[:, None] + jj[None, :]) % smax, root)
@@ -222,7 +246,10 @@ def make_pool_commit_step(cfg, Tpad: int):
             new_pos = new_pos.at[keep_slots].set(keep_vals)
             new_len = (C + 1 + path_len).astype(jnp.int32)
         cache = dict(cache)
-        cache["attn"] = {"k": k, "v": v, "pos": new_pos, "len": new_len}
+        new_attn = {"k": k, "v": v, "pos": new_pos, "len": new_len}
+        if paged:
+            new_attn["block_tbl"] = a["block_tbl"]
+        cache["attn"] = new_attn
         return cache
 
     return commit
