@@ -1,32 +1,49 @@
-"""Continuous-batching throughput: batched pool engine vs. sequential loop.
+"""Continuous-batching throughput: batched pool engine vs. sequential loop,
+with the pipelined stepping mode measured against both.
 
     PYTHONPATH=src python benchmarks/batch_throughput.py [--arch granite-8b]
         [--batch-sizes 1,4,8] [--max-new 24] [--verifier specinfer]
-        [--ring] [--block-size 64] [--coresidency]
+        [--ring] [--block-size 64] [--coresidency] [--no-pipeline]
+        [--json BENCH_batch_throughput.json]
 
-For each batch size N, serves N synthetic requests two ways:
+For each batch size N, serves N synthetic requests three ways:
 
   * sequential — one ``SpeculativeEngine``, requests one after another (the
     pre-batching serving path: throughput == single-stream latency);
   * batched    — ``BatchedSpeculativeEngine`` with an N-slot pool: every
-    draft/target call advances all N streams.
+    draft/target call advances all N streams;
+  * pipelined  — the same engine with ``pipeline=True``: each step's host
+    verify/retire tail overlaps the next step's dispatched device work
+    (skipped with ``--no-pipeline``).
 
 Reported tokens/sec is aggregate (all requests' emitted tokens / wall).
 Wall-clock excludes compilation: each engine first runs the whole workload
 untimed (populating its jit cache for every shape bucket the workload
 hits), then the timed pass re-runs it — so the comparison prices the
-steady-state serving loop.  Outputs are seeded identically, so the batched
-column also re-checks the exactness contract while it measures.  Each row
-surfaces the engine's commit counters (one fused commit call per step —
-see benchmarks/commit_bench.py for the commit-path microbenchmark).
+steady-state serving loop.  The warmup pass doubles as the commit profiler
+(it blocks on every fused commit for an honest ``commit_ms``) and as the
+occupancy probe; the timed pass runs unblocked, so commit dispatches
+overlap host work exactly as they do in production for BOTH stepping
+modes.  Outputs are seeded identically, so the batched and pipelined
+columns also re-check the exactness contract while they measure.
+
+``--json`` writes the machine-readable ``BENCH_batch_throughput.json``
+document (benchmarks/common.py ``write_bench_json``) that
+scripts/bench_smoke.sh gates CI on and benchmarks/baselines/ archives.
 """
 from __future__ import annotations
 
 import argparse
+import statistics
 import time
 
 import jax
 import numpy as np
+
+try:
+    from benchmarks.common import write_bench_json
+except ImportError:  # executed as a script: benchmarks/ itself is sys.path[0]
+    from common import write_bench_json
 
 from repro.configs import get_smoke
 from repro.launch.serve import make_draft_cfg
@@ -40,7 +57,19 @@ def _prompts(n, vocab, seed=0):
     return [rng.integers(0, vocab, size=6).tolist() for _ in range(n)]
 
 
-def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
+def _median_timed(workload, reps):
+    """Median wall-clock over ``reps`` repeats of a deterministic workload —
+    the tiny smoke configs finish in fractions of a second, where scheduler
+    noise swamps single-shot timings."""
+    times, outs = [], None
+    for _ in range(reps):
+        t0 = time.time()
+        outs = workload()
+        times.append(time.time() - t0)
+    return outs, statistics.median(times)
+
+
+def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds, reps=1):
     eng = SpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling)
 
     def workload():
@@ -51,26 +80,29 @@ def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds):
         return outs
 
     workload()  # warm every shape the workload compiles
-    t0 = time.time()
-    outs = workload()
-    return outs, time.time() - t0
+    return _median_timed(workload, reps)
 
 
 def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
-                paged=True, block_size=64):
+                paged=True, block_size=64, pipeline=False, reps=1):
     eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts),
-                                   paged=paged, block_size=block_size)
-    eng.profile_commits = True  # honest commit_ms: block on the commit op
+                                   paged=paged, block_size=block_size, pipeline=pipeline)
 
     def workload():
+        # per-pass units: the reported overlap counters describe ONE
+        # workload pass, like the commit/occupancy numbers they sit next to
+        eng.counters["pipeline_ahead"] = eng.counters["pipeline_stalls"] = 0
         rids = [eng.submit(list(p), max_new=max_new, seed=sd) for p, sd in zip(prompts, seeds)]
         outs = eng.run()
         return [outs[r]["tokens"] for r in rids]
 
-    # warmup pass doubles as the occupancy probe: it steps manually and
-    # samples pool_occupancy() whenever the used-block peak advances, so the
-    # timed pass below stays free of host polling (the workload repeats
-    # deterministically, so the warmup's peak occupancy is the timed one)
+    # Warmup pass: compiles every shape bucket, profiles commits honestly
+    # (profile_commits blocks on each fused commit — doing that in the timed
+    # pass would serialize the very overlap the pipeline exists to create)
+    # and probes pool occupancy whenever the used-block peak advances.  The
+    # workload repeats deterministically, so the warmup's commit cost and
+    # peak occupancy are the timed pass's too.
+    eng.profile_commits = True
     for p, sd in zip(prompts, seeds):
         eng.submit(list(p), max_new=max_new, seed=sd)
     peak = {"blocks": -1, "occ": {}}
@@ -80,11 +112,17 @@ def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
         if occ and occ["target"]["blocks_used"] >= peak["blocks"]:
             peak = {"blocks": occ["target"]["blocks_used"], "occ": occ}
     eng.finished.clear()
-    for key in ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak"):
+    commit_stats = {k: eng.counters[k] for k in
+                    ("commit_calls", "commit_ms", "blocks_peak", "blocks_reclaimed")}
+    # Timed pass: the steady-state serving loop, commits dispatched async.
+    eng.profile_commits = False
+    for key in ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak",
+                "pipeline_ahead", "pipeline_stalls"):
         eng.counters[key] = 0
-    t0 = time.time()
-    outs = workload()
-    return outs, time.time() - t0, dict(eng.counters), peak["occ"]
+    outs, dt = _median_timed(workload, reps)
+    counters = dict(eng.counters)
+    counters.update(commit_stats)  # report the honest (blocked) commit numbers
+    return outs, dt, counters, peak["occ"]
 
 
 def run_coresidency(cfg, tp, dcfg, dp, ecfg, sampling, seed, block_size=16):
@@ -139,6 +177,15 @@ def main(argv=None):
     ap.add_argument("--coresidency", action="store_true",
                     help="run the long+short co-residency scenario instead of "
                          "the throughput sweep")
+    ap.add_argument("--pipeline", default=True, action=argparse.BooleanOptionalAction,
+                    help="also measure the pipelined stepping mode "
+                         "(--no-pipeline skips that column)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_batch_throughput.json document here")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions per mode; the reported wall is "
+                         "the median (smoke configs are sub-second, where "
+                         "single-shot timings are scheduler noise)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch)
@@ -155,40 +202,87 @@ def main(argv=None):
         return []
 
     sizes = [int(s) for s in args.batch_sizes.split(",")]
+    pool = "ring" if args.ring else f"paged(block={args.block_size})"
     print(f"arch={args.arch}(smoke) verifier={args.verifier} "
-          f"action=({args.K},{args.L1},{args.L2}) max_new={args.max_new} "
-          f"pool={'ring' if args.ring else f'paged(block={args.block_size})'}")
-    print(f"{'batch':>5} {'seq tok/s':>10} {'batched tok/s':>14} {'speedup':>8} {'exact':>6}")
-    rows = []
+          f"action=({args.K},{args.L1},{args.L2}) max_new={args.max_new} pool={pool}")
+    header = f"{'batch':>5} {'seq tok/s':>10} {'batched tok/s':>14}"
+    if args.pipeline:
+        header += f" {'pipelined tok/s':>16} {'pipe/sync':>9}"
+    print(header + f" {'exact':>6}")
+    rows, json_rows = [], []
     for n in sizes:
         prompts = _prompts(n, cfg.vocab, args.seed)
         seeds = [args.seed + 100 + i for i in range(n)]
         outs_s, dt_s = run_sequential(cfg, tp, dcfg, dp, ecfg, sampling,
-                                      prompts, args.max_new, seeds)
+                                      prompts, args.max_new, seeds, reps=args.reps)
         outs_b, dt_b, counters, occ = run_batched(
             cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
-            paged=not args.ring, block_size=args.block_size)
-        tok = n * args.max_new
+            paged=not args.ring, block_size=args.block_size, reps=args.reps)
+        # actual emitted tokens (an evicted request returns fewer than
+        # max_new); the exactness checks below pin all modes to this count
+        tok = sum(len(o) for o in outs_s)
         exact = all(a == b for a, b in zip(outs_s, outs_b))
-        rows.append((n, tok / dt_s, tok / dt_b, exact))
+        dt_p, pipe_exact, pcounters = None, True, {}
+        if args.pipeline:
+            outs_p, dt_p, pcounters, _ = run_batched(
+                cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
+                paged=not args.ring, block_size=args.block_size, pipeline=True,
+                reps=args.reps)
+            pipe_exact = all(a == b for a, b in zip(outs_s, outs_p))
+        rows.append((n, tok / dt_s, tok / dt_b,
+                     tok / dt_p if dt_p else None, exact and pipe_exact))
         cc = max(counters["commit_calls"], 1)
-        pool = ""
+        pool_note = ""
         if occ:
             # blocks_peak and blocks_total both describe the TARGET arena
             # (the engine scopes the peak counter to it)
             t = occ["target"]
-            pool = (f"   pool: {counters['blocks_peak']}/{t['blocks_total']} blocks peak"
-                    f" (frag {t['fragmentation']:.2f}, reclaimed {counters['blocks_reclaimed']})")
-        print(f"{n:>5} {tok / dt_s:>10.2f} {tok / dt_b:>14.2f} "
-              f"{dt_s / dt_b:>7.2f}x {'yes' if exact else 'NO':>6}"
-              f"   commit: {counters['commit_calls']} calls, "
-              f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)"
-              f"{pool}")
+            pool_note = (f"   pool: {counters['blocks_peak']}/{t['blocks_total']} blocks peak"
+                         f" (frag {t['fragmentation']:.2f}, "
+                         f"reclaimed {counters['blocks_reclaimed']})")
+        line = f"{n:>5} {tok / dt_s:>10.2f} {tok / dt_b:>14.2f}"
+        if dt_p:
+            line += f" {tok / dt_p:>16.2f} {dt_b / dt_p:>8.2f}x"
+        line += (f" {'yes' if exact and pipe_exact else 'NO':>6}"
+                 f"   commit: {counters['commit_calls']} calls, "
+                 f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)")
+        if pcounters:
+            line += (f"   overlap: {pcounters['pipeline_ahead']} ahead, "
+                     f"{pcounters['pipeline_stalls']} stalls")
+        print(line + pool_note)
+        json_rows.append({
+            "batch": n,
+            "tokens": tok,
+            "tokens_per_sec": {
+                "sequential": tok / dt_s,
+                "batched": tok / dt_b,
+                "pipelined": tok / dt_p if dt_p else None,
+            },
+            "speedup_batched_vs_sequential": dt_s / dt_b,
+            "speedup_pipelined_vs_batched": dt_b / dt_p if dt_p else None,
+            "exact": bool(exact),
+            "pipeline_exact": bool(pipe_exact),
+            "commit_calls": counters["commit_calls"],
+            "commit_ms": counters["commit_ms"],
+            "blocks_peak": counters["blocks_peak"],
+            "blocks_reclaimed": counters["blocks_reclaimed"],
+            "pipeline_ahead": pcounters.get("pipeline_ahead"),
+            "pipeline_stalls": pcounters.get("pipeline_stalls"),
+        })
     if len(rows) > 1:
         first, last = rows[0], rows[-1]
         scale = last[2] / first[2]
         print(f"\nbatched tokens/sec scaling {first[0]}->{last[0]} streams: {scale:.2f}x "
               f"(sequential stays ~flat by construction)")
+    if args.json:
+        write_bench_json(args.json, "batch_throughput",
+                         {"arch": args.arch, "verifier": args.verifier,
+                          "K": args.K, "L1": args.L1, "L2": args.L2,
+                          "max_new": args.max_new, "batch_sizes": sizes,
+                          "pool": pool, "block_size": args.block_size,
+                          "max_cache": ecfg.max_cache, "seed": args.seed},
+                         json_rows)
+        print(f"wrote {args.json}")
     return rows
 
 

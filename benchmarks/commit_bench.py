@@ -17,7 +17,10 @@ commits it two ways:
 
 Reports wall-time per step (median over --iters, post-warmup) and the
 analytic device-copy bytes each strategy moves per step.  The fused column
-must win at 8 streams (ISSUE 2 acceptance criterion).
+must win at 8 streams (ISSUE 2 acceptance criterion).  ``--json PATH``
+writes the machine-readable ``BENCH_commit_bench.json`` document
+(benchmarks/common.py ``write_bench_json``) the CI bench-smoke gate and the
+checked-in baselines consume.
 """
 from __future__ import annotations
 
@@ -29,6 +32,11 @@ import types
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from benchmarks.common import write_bench_json
+except ImportError:  # executed as a script: benchmarks/ itself is sys.path[0]
+    from common import write_bench_json
 
 from repro.serving.serve_step import commit_row_reference, make_pool_commit_step, next_pow2
 
@@ -124,6 +132,16 @@ def run(args):
         rows.append((n, seq_ms, fused_ms))
         print(f"{n:>8} {seq_ms:>12.3f} {fused_ms:>14.3f} {seq_ms / fused_ms:>7.2f}x "
               f"{sb:>12.2f} {fb:>14.3f}")
+    if args.json:
+        write_bench_json(
+            args.json, "commit_bench",
+            {"streams": sizes, "layers": L, "smax": S, "kv_heads": H,
+             "head_dim": hd, "tpad": Tpad, "iters": args.iters,
+             "impl": args.impl, "seed": args.seed},
+            [{"streams": n, "commit_ms": {"sequential": s, "fused": f},
+              "speedup_fused_vs_sequential": s / f} for n, s, f in rows],
+        )
+        print(f"wrote {args.json}")
     return rows
 
 
@@ -138,6 +156,8 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_commit_bench.json document here")
     return run(ap.parse_args(argv))
 
 

@@ -147,3 +147,32 @@ FAMILY_LATENCY = {
 def family_latency(family: str, chips: int = 8) -> LatencyModel:
     nt, nd = FAMILY_LATENCY[family]
     return analytic_latency(nt, nd, nt / 4e6, nd / 4e6, chips)
+
+
+# ------------------------------------------------------- bench JSON schema ---
+
+BENCH_SCHEMA = 1
+
+
+def write_bench_json(path: str, name: str, config: dict, results: list[dict]) -> dict:
+    """Emit a bench run as the stable machine-readable ``BENCH_<name>.json``
+    document the regression gate (scripts/bench_smoke.sh) and the checked-in
+    baselines (benchmarks/baselines/) consume:
+
+        {"bench": <name>, "schema": BENCH_SCHEMA,
+         "config": {...flags of the run...},
+         "results": [ {...one row per measured point...} ]}
+
+    ``config`` holds the knobs that define the run (arch, verifier, action,
+    sizes); each ``results`` row holds the measured numbers for one point
+    (tokens/sec per mode, commit_ms, blocks peak, exactness booleans).  The
+    writer is schema-versioned so gates can refuse documents they do not
+    understand instead of misreading them.
+    """
+    import json
+
+    doc = {"bench": name, "schema": BENCH_SCHEMA, "config": config, "results": results}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc

@@ -11,7 +11,6 @@ Offline policy training and evaluation exactly per Sec. 6 / App. E:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,7 +19,6 @@ from benchmarks.verifier_tables import block_efficiency
 from repro.core.selector import (
     FixedSpace,
     SelectorConfig,
-    init_selector,
     make_scalar_features,
     selector_logits,
 )

@@ -25,7 +25,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
 
 PEAK = 197e12
 HBM = 819e9

@@ -8,7 +8,6 @@ import argparse
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import init_params
 from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
 from repro.training.data import SyntheticLM
 from repro.training.loop import train

@@ -6,7 +6,6 @@ Builds a tiny target + draft pair, drafts (K, L1, L2)-delayed trees, verifies
 with SpecInfer and with Traversal, and shows the block-efficiency difference.
 """
 import jax
-import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_params

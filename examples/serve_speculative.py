@@ -14,16 +14,12 @@ random guess, which is what makes speculative decoding pay off.
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import forward, init_params
 from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
 from repro.training.data import SyntheticLM
 from repro.training.loop import train
-from repro.training.optim import AdamW
 
 V = 256
 

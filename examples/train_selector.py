@@ -8,13 +8,11 @@ Eq. 11 latency) -> Eq. 12 training -> engine A/B: static vs NDE policy.
 """
 import argparse
 
-import jax
 import numpy as np
 
 from repro.core.delayed import LatencyModel
 from repro.core.selector import FixedSpace, SelectorConfig
 from repro.models.config import ModelConfig
-from repro.models.transformer import init_params
 from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
 from repro.serving.nde import NeuralSelector
 from repro.training.data import SyntheticLM

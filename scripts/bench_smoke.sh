@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Bench-regression smoke gate: run tiny-config variants of the serving
+# benchmarks, write their machine-readable BENCH_<name>.json documents
+# (benchmarks/common.py write_bench_json; committed baselines live in
+# benchmarks/baselines/), and FAIL if
+#
+#   * either harness crashes,
+#   * a batched/pipelined run is not token-exact against the sequential
+#     engine,
+#   * pipelined stepping falls below BENCH_TOL x the synchronous batched
+#     throughput on the smoke config (BENCH_TOL defaults to 0.93: the
+#     pipelined engine must be at least at parity; the tolerance absorbs
+#     scheduler noise on shared CI runners — sub-second smoke walls swing
+#     a few percent run to run even at median-of-3),
+#   * the fused commit stops beating the sequential per-row commit.
+#
+#   BENCH_OUT=dir  where to write the JSON artifacts (default bench_out/)
+#   BENCH_TOL=f    pipelined-vs-sync tolerance (default 0.93)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+OUT="${BENCH_OUT:-bench_out}"
+TOL="${BENCH_TOL:-0.93}"
+mkdir -p "$OUT"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python benchmarks/batch_throughput.py --arch granite-8b --batch-sizes 8 \
+    --max-new 12 --reps 3 --json "$OUT/BENCH_batch_throughput.json"
+python benchmarks/commit_bench.py --streams 1,8 --iters 5 --layers 2 \
+    --smax 128 --json "$OUT/BENCH_commit_bench.json"
+
+python - "$OUT" "$TOL" <<'EOF'
+import json
+import sys
+
+out, tol = sys.argv[1], float(sys.argv[2])
+
+with open(f"{out}/BENCH_batch_throughput.json", encoding="utf-8") as f:
+    bt = json.load(f)
+assert bt["bench"] == "batch_throughput" and bt["schema"] == 1, "unknown bench schema"
+for row in bt["results"]:
+    n, tps = row["batch"], row["tokens_per_sec"]
+    assert row["exact"], f"batch={n}: batched output diverged from sequential"
+    assert row["pipeline_exact"], f"batch={n}: pipelined output diverged from sequential"
+    assert tps["batched"] > tps["sequential"], \
+        f"batch={n}: batching lost to the sequential loop ({tps})"
+    assert tps["pipelined"] is not None and tps["pipelined"] >= tol * tps["batched"], \
+        f"batch={n}: pipelined {tps['pipelined']:.1f} tok/s < {tol} x " \
+        f"synchronous {tps['batched']:.1f} tok/s"
+
+with open(f"{out}/BENCH_commit_bench.json", encoding="utf-8") as f:
+    cb = json.load(f)
+assert cb["bench"] == "commit_bench" and cb["schema"] == 1, "unknown bench schema"
+worst = min(r["speedup_fused_vs_sequential"] for r in cb["results"])
+assert worst > 1.0, f"fused commit no longer beats the per-row chain ({worst:.2f}x)"
+
+pipe = [f"{r['tokens_per_sec']['pipelined'] / r['tokens_per_sec']['batched']:.2f}x"
+        for r in bt["results"]]
+print(f"bench smoke OK: pipelined/sync {', '.join(pipe)}; "
+      f"fused commit worst case {worst:.2f}x over per-row")
+EOF

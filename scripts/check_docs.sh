@@ -19,7 +19,7 @@ docs = ["README.md"] + sorted(
 # backtick-quoted tokens that look like repo paths: contain a slash or end
 # in a known source suffix; trailing :line / #anchor / CLI tails stripped
 token_re = re.compile(r"`([A-Za-z0-9_./-]+)`")
-suffixes = (".py", ".sh", ".md", ".txt", ".toml")
+suffixes = (".py", ".sh", ".md", ".txt", ".toml", ".yml", ".json")
 for doc in docs:
     text = open(doc, encoding="utf-8").read()
     for tok in token_re.findall(text):

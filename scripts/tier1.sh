@@ -1,10 +1,18 @@
 #!/usr/bin/env bash
-# Fast tier-1 verify in one invocation: the non-slow test tier with the
-# src/ tree on PYTHONPATH (see ROADMAP.md "Tier-1 verify" for the full run).
+# Fast tier-1 verify in one invocation: docs lint, ruff (when installed),
+# then the non-slow test tier with the src/ tree on PYTHONPATH (see
+# ROADMAP.md "Tier-1 verify" for the full run).
 #
 #   scripts/tier1.sh            # fast tier
 #   scripts/tier1.sh -k commit  # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 scripts/check_docs.sh
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+elif python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check .
+else
+    echo "tier1: ruff not installed; skipping lint (CI runs it)"
+fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q -m "not slow" "$@"

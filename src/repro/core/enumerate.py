@@ -19,7 +19,7 @@ import zlib
 
 import numpy as np
 
-from repro.core.trees import DraftTree, attach_target, delayed_tree_node_count
+from repro.core.trees import DraftTree, attach_target
 
 
 class RandomModel:

@@ -19,7 +19,6 @@ penalty on the worst alpha-fraction of baseline regressions.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ i.i.d. root rollouts; K=1 recovers a single path of length L1+L2.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -22,7 +22,6 @@ import time
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_arches

@@ -10,6 +10,9 @@ and reports block efficiency + the Eq. 11 modelled throughput.
 ``--streams N`` switches to the continuous-batching engine: an N-slot KV
 pool with FIFO admission, so requests beyond N queue and are admitted as
 slots free up — every model call advances all resident streams at once.
+Batched serving steps pipelined by default (each step's host verify/retire
+tail overlaps the next step's dispatched device work, token-identically);
+``--no-pipeline`` restores strictly sequential steps.
 """
 from __future__ import annotations
 
@@ -79,6 +82,12 @@ def main(argv=None):
     ap.add_argument("--ring", action="store_true",
                     help="disable the paged KV pool and reserve a full "
                          "max_cache ring per stream (the PR-1 layout)")
+    ap.add_argument("--pipeline", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="pipelined stepping: overlap each step's host "
+                         "verify/retire tail with the next step's dispatched "
+                         "device work (token-identical; --no-pipeline "
+                         "restores strictly sequential steps)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -96,7 +105,8 @@ def main(argv=None):
         eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
                                        n_slots=args.streams, paged=not args.ring,
                                        block_size=args.block_size,
-                                       pool_blocks=args.pool_blocks or None)
+                                       pool_blocks=args.pool_blocks or None,
+                                       pipeline=args.pipeline)
         t0 = time.time()
         rids = [
             eng.submit(rng.integers(0, cfg.vocab, size=8).tolist(),
@@ -114,11 +124,16 @@ def main(argv=None):
             f"paged(block={eng.block_size}, arena={eng.pool_blocks} blocks, "
             f"peak={c['blocks_peak']} used, reclaimed={c['blocks_reclaimed']})"
         )
+        stepping = (
+            f"pipelined(ahead={c['pipeline_ahead']}, stalls={c['pipeline_stalls']})"
+            if args.pipeline else "sync"
+        )
         print(
             f"\n[batched x{args.streams}] verifier={args.verifier} "
             f"({args.K},{args.L1},{args.L2}) block_efficiency={be:.3f} "
             f"target_calls={c['target_calls']} draft_tokens={c['draft_tokens']} "
-            f"evicted={c['evicted']} pool={pool} wall={dt:.1f}s "
+            f"evicted={c['evicted']} pool={pool} stepping={stepping} "
+            f"wall={dt:.1f}s "
             f"tokens/s(cpu)={sum(len(o['tokens']) for o in outs.values()) / dt:.2f}"
         )
         return

@@ -415,12 +415,75 @@ class CachePool:
     streams can join (prefill a 1-row cache, scatter it in) and leave
     (release the slot) without any recompilation: every model call sees the
     same (n_slots, ...) shapes.
+
+    Double-buffered rows (pipelined stepping, docs/serving.md): between
+    ``begin_frame()`` and ``drop_frame()`` the pool holds a *back buffer* —
+    the cache pytree as of the frame start — alongside the evolving front.
+    Cache arrays are immutable, so the back buffer is a reference, not a
+    copy; its only cost is that in-place donation of the front buffer must
+    be suppressed while a frame is held (``frame_held``), since donating
+    would hand the back buffer's storage to XLA.  ``rollback_frame()``
+    restores the back buffer — the drain rule's rewind for a begun-but-
+    abandoned pipelined step.
     """
 
     def __init__(self, cache: dict, n_slots: int):
         self.cache = cache
         self.n_slots = n_slots
         self._free = list(range(n_slots))
+        self._back: dict | None = None
+
+    # ---------------------------------------------- double-buffered rows ---
+
+    @property
+    def frame_held(self) -> bool:
+        """True while a back buffer is alive: donating the front buffer is
+        then forbidden (the back buffer aliases its pre-frame storage)."""
+        return self._back is not None
+
+    def begin_frame(self) -> None:
+        """Hold the current cache as the back buffer.  One frame at a time:
+        the pipelined engine begins a frame per in-flight step and either
+        drops it (step retired) or rolls it back (step aborted)."""
+        assert self._back is None, "frame already held"
+        self._back = self.cache
+
+    def drop_frame(self) -> None:
+        """Release the back buffer (the in-flight step is being finished);
+        the front buffer becomes donatable again."""
+        self._back = None
+
+    def rollback_frame(self) -> None:
+        """Restore the back buffer as the live cache — every write since
+        ``begin_frame`` (ingest, drafting) is discarded."""
+        assert self._back is not None, "no frame to roll back"
+        self.cache = self._back
+        self._back = None
+
+    def invalidate_from(self, starts: dict[int, int]) -> None:
+        """Erase rows' speculative attention writes: for each {row: start},
+        invalidate every pos lane holding a position >= start and rewind the
+        row's len to start.  Slot arithmetic is logical, so this covers ring
+        and paged layouts alike; the orphaned KV lanes keep their garbage but
+        pos = -1 bars them from every mask (the trash-lane argument).  Used
+        by the pipelined engine to abort a dispatched tree pass whose pool
+        buffer was donated (the pre-pass buffer no longer exists)."""
+        if not starts:
+            return
+        assert "attn" in self.cache, "invalidate_from targets attention caches"
+        rows = np.fromiter(starts.keys(), np.int32)
+        st = np.fromiter((starts[r] for r in rows), np.int32)
+        attn = dict(self.cache["attn"])
+        rows_j = jnp.asarray(rows)
+        st_j = jnp.asarray(st)
+        sub = attn["pos"][rows_j]
+        attn["pos"] = attn["pos"].at[rows_j].set(jnp.where(sub >= st_j[:, None], -1, sub))
+        attn["len"] = attn["len"].at[rows_j].set(st_j)
+        cache = dict(self.cache)
+        cache["attn"] = attn
+        self.cache = cache
+
+    # ------------------------------------------------------------- slots ---
 
     @property
     def free_slots(self) -> int:

@@ -12,11 +12,9 @@ Three entry points (all pure):
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.cache import (
     append_layer_kv,

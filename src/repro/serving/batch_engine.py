@@ -56,12 +56,28 @@ independent ``SpeculativeEngine`` run per stream.  This leans on three facts:
 Scheduling: admission is FIFO (``submit`` queues, free slots admit); a stream
 is evicted (finished early) when its context can no longer fit a speculation
 block in its cache ring.  ``launch/serve.py --streams N`` drives this engine.
+
+Pipelined stepping (``pipeline=True``, docs/serving.md "Pipelined stepping"):
+``step()`` is built from two halves — ``begin_step()`` runs the scheduling
+boundary (admission, capacity eviction, paged block mapping) and dispatches
+the draft + tree-pass device work, returning a ``PendingStep`` whose tree
+outputs are still device futures; ``finish_step()`` verifies on host, issues
+the fused commit, and retires the step.  In pipelined mode ``finish_step``
+dispatches the NEXT step's draft/tree work right after verification, before
+its own retirement bookkeeping, so step i's host tail overlaps step i+1's
+device work.  A stall-and-drain rule keeps scheduling — and therefore
+tokens — identical to the synchronous engine: the pipeline never runs ahead
+across an iteration that retires a stream (slot/block releases must land
+before the next admission/pressure decision), and a begun step can be
+drained (``drain_pipeline``) or rewound (``abort_step``) against the draft
+pool's double-buffered back frame (models/cache.py ``begin_frame``).
 """
 from __future__ import annotations
 
+import copy
 import time
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -88,6 +104,7 @@ from repro.serving.engine import (
     verify_tree,
 )
 from repro.serving.serve_step import (
+    StagingBuffers,
     make_pool_commit_step,
     make_pool_decode_step,
     make_pool_locked_step,
@@ -106,6 +123,39 @@ class BatchRequest:
     seed: int
 
 
+@dataclass
+class PendingStep:
+    """A dispatched-but-unverified iteration: everything ``finish_step``
+    needs to verify, commit and retire it.
+
+    For the tree strategy ``p_dev``/``hid_dev`` are *device* arrays (the
+    warped tree-pass logits and hidden states, with async host copies
+    already kicked off) — the futures the pipeline overlaps host work
+    against.  The replay strategy's target pass is host-interleaved, so it
+    arrives already materialised as ``snapshot``/``p_host``.
+
+    ``C0`` (committed length minus the pending root, per slot) and
+    ``rng_state`` (per-stream generator snapshots, pipelined mode only)
+    are the rewind coordinates ``abort_step`` uses."""
+
+    active: list[int]
+    acts: dict[int, tuple]
+    pads: tuple[int, int, int, int]
+    trees: dict
+    hq: dict
+    C0: dict[int, int]
+    p_dev: object = None
+    hid_dev: object = None
+    snapshot: dict | None = None
+    p_host: dict | None = None
+    rng_state: dict | None = None
+    # True when this step's scheduling boundary evicted a stream: its slot
+    # and block releases stand, so replaying admission against the
+    # post-eviction pool would not reproduce the synchronous
+    # admit-before-evict order (submit()'s drain-vs-abort rule)
+    boundary_evicted: bool = False
+
+
 class BatchedSpeculativeEngine:
     """Multi-stream speculative decoding over a slot-based cache pool.
 
@@ -118,7 +168,8 @@ class BatchedSpeculativeEngine:
     def __init__(self, target_cfg, target_params, draft_cfg, draft_params,
                  ecfg: EngineConfig, sampling: SamplingParams | None = None,
                  selector=None, n_slots: int = 4, paged: bool = True,
-                 block_size: int = 64, pool_blocks: int | None = None):
+                 block_size: int = 64, pool_blocks: int | None = None,
+                 pipeline: bool = False):
         assert target_cfg.vocab == draft_cfg.vocab
         assert n_slots >= 1, f"need at least one pool slot, got {n_slots}"
         assert target_cfg.arch_type not in ("encdec", "vlm"), \
@@ -166,7 +217,12 @@ class BatchedSpeculativeEngine:
         self._next_rid = 0
         self._admit_seq = 0
         self._jit_cache: dict = {}
-        self._staging: dict = {}
+        # pipelined mode double-banks the staging so refilling step i+1's
+        # index arrays never touches the bank step i was built from
+        self.pipeline = pipeline
+        self._staging = StagingBuffers(banks=2 if pipeline else 1)
+        self._pending_next: PendingStep | None = None
+        self._drained_events: list[dict] = []  # retired by submit(), not yet returned
         # commit_ms times the dispatch only unless profile_commits is set
         # (benchmarks set it): blocking on the commit every step would
         # serialize host bookkeeping against the device op it just saved.
@@ -174,7 +230,8 @@ class BatchedSpeculativeEngine:
         self.counters = {"target_calls": 0, "target_tokens": 0, "draft_calls": 0,
                          "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0,
                          "commit_calls": 0, "commit_ms": 0.0,
-                         "blocks_reclaimed": 0, "admit_blocked": 0, "blocks_peak": 0}
+                         "blocks_reclaimed": 0, "admit_blocked": 0, "blocks_peak": 0,
+                         "pipeline_ahead": 0, "pipeline_stalls": 0}
 
     # ------------------------------------------------------------- helpers ---
 
@@ -202,18 +259,13 @@ class BatchedSpeculativeEngine:
         return self._jit_cache[name]
 
     def _stage(self, name, shape, dtype, fill=0):
-        """Reusable host staging buffer for per-step index arrays.
-
-        Every phase ends with a blocking host read of its outputs, so a
-        buffer is always consumed by the device before it is refilled —
-        staging keeps the per-step H2D traffic at a handful of small,
-        allocation-free index arrays."""
-        key = (name, shape)
-        buf = self._staging.get(key)
-        if buf is None:
-            buf = self._staging[key] = np.empty(shape, dtype)
-        buf.fill(fill)
-        return buf
+        """Reusable host staging buffer for per-step index arrays
+        (serve_step.StagingBuffers) — keeps the per-step H2D traffic at a
+        handful of small, allocation-free index arrays.  The synchronous
+        engine runs one bank (every phase ends with a blocking host read, so
+        a buffer is consumed before it is refilled); the pipelined engine
+        flips between two banks at each ``begin_step``."""
+        return self._staging.get(name, shape, dtype, fill)
 
     def _scatter_rows(self, pool_cache, trims, rows, *, donate: bool):
         """Write per-row sub-caches back into a pool with ONE scatter call.
@@ -272,6 +324,27 @@ class BatchedSpeculativeEngine:
                     f"prompt of {len(prompt)} tokens needs {need} blocks "
                     f"(context + one speculation bucket); the arena has {cap}"
                 )
+        if self._pending_next is not None and self.tpool.free_slots:
+            # A begun-ahead step locked in its admission decisions without
+            # this request, and a free row means those decisions could have
+            # included it (with zero free rows admission is provably
+            # unchanged, so the dispatched step is kept).  Stall-and-drain:
+            #   * boundary evicted a stream -> the release stands, so
+            #     replaying admission would see post-eviction rows the
+            #     synchronous admit-before-evict order would not; retire
+            #     the step instead (its events surface at the next step())
+            #     and the request joins at the following boundary — the
+            #     same boundary at which the synchronous engine, whose
+            #     admission ran before the eviction freed anything, admits;
+            #   * otherwise -> rewind the step (abort_step) so the next
+            #     begin_step re-runs the identical boundary with this
+            #     request queued, exactly as the synchronous engine would.
+            pending, self._pending_next = self._pending_next, None
+            if pending.boundary_evicted:
+                self._drained_events.extend(
+                    self.finish_step(pending, pipeline_ahead=False))
+            else:
+                self.abort_step(pending)
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(BatchRequest(rid, list(prompt), max_new,
@@ -395,9 +468,10 @@ class BatchedSpeculativeEngine:
                     hq[s] = hid[i, L - 1]
                 self.counters["draft_calls"] += 1
                 self.counters["draft_tokens"] += L * len(rows)
-            # one donated write-back for every length group's rows
+            # one write-back for every length group's rows — donated unless
+            # the pipelined back frame still aliases the pre-step buffer
             self.dpool.cache = self._scatter_rows(self.dpool.cache, trims, all_rows,
-                                                  donate=True)
+                                                  donate=not self.dpool.frame_held)
         else:
             Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
             toks = self._stage("ing_toks", (self.n_slots, Dp), np.int32)
@@ -599,8 +673,11 @@ class BatchedSpeculativeEngine:
 
     # ----------------------------------------------------- target: tree -----
 
-    def _target_tree_pass(self, active, trees, Tpad):
-        """One padded tree-masked target pass over every active row.
+    def _target_tree_dispatch(self, active, trees, Tpad):
+        """Dispatch ONE padded tree-masked target pass over every active row
+        and return its warped logits / hidden states as DEVICE arrays (with
+        async host copies kicked off) — the futures ``finish_step`` blocks
+        on, so the host is free between dispatch and verification.
 
         The host ships (B, Tpad) token and parent-pointer index arrays only:
         ancestor masks are composed on device (device_ancestor_mask) and the
@@ -623,7 +700,12 @@ class BatchedSpeculativeEngine:
         self.tpool.cache = cache
         self.counters["target_calls"] += 1
         self.counters["target_tokens"] += sum(trees[s].n_nodes for s in active)
-        return np.asarray(self._warp(logits)), np.asarray(hidden)
+        p_dev = self._warp(logits)
+        for arr in (p_dev, hidden):
+            start_copy = getattr(arr, "copy_to_host_async", None)
+            if start_copy is not None:
+                start_copy()
+        return p_dev, hidden
 
     def _commit_tree_batch(self, active, node_paths, Tpad):
         """Fused commit: ONE jitted, pool-donating call re-compacts every
@@ -759,13 +841,23 @@ class BatchedSpeculativeEngine:
 
     # ---------------------------------------------------------------- step ---
 
-    def step(self) -> list[dict]:
-        """Admit queued requests, advance every active stream one speculative
-        block, and return per-request progress events."""
+    def begin_step(self) -> PendingStep | None:
+        """The DISPATCH half of a step: run the scheduling boundary (admit
+        queued requests, capacity-evict, map paged blocks), then dispatch
+        the draft ingest, the delayed-tree drafting and the tree-masked
+        target pass.  Returns a ``PendingStep`` whose tree-pass outputs are
+        device futures (tree strategy), or None when nothing is active.
+
+        ALL admission/eviction/block-pressure decisions happen here, at the
+        pipeline boundary — never between a dispatch and its verification —
+        which is what lets the pipelined driver overlap ``finish_step``'s
+        host tail with the next step's device work without perturbing
+        scheduling (the exactness argument in docs/serving.md)."""
+        self._staging.flip()
         self._admit()
         active = [s for s in sorted(self.streams) if not self.streams[s]["done"]]
         if not active:
-            return []
+            return None
         acts = {s: tuple(self.choose_action(self.streams[s])) for s in active}
         # eviction: a stream whose ring cannot hold another padded speculation
         # block (the tree pass writes Tpad slots from the batch-maxima
@@ -774,6 +866,7 @@ class BatchedSpeculativeEngine:
         _, _, _, Tpad = self._bucket_actions(acts)
         Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
         smax = self.ecfg.max_cache
+        boundary_evicted = False
         for s in list(active):
             C = len(self.streams[s]["committed"])
             d = len(self.streams[s]["draft_delta"])
@@ -785,8 +878,9 @@ class BatchedSpeculativeEngine:
                 self._finish(s, reason="evicted:cache_full")
                 active.remove(s)
                 del acts[s]
+                boundary_evicted = True
         if not active:
-            return []
+            return None
         # re-bucket: eviction can only shrink the maxima, never grow them
         pads = self._bucket_actions(acts)
         Kp, L1p, L2p, Tpad = pads
@@ -796,17 +890,53 @@ class BatchedSpeculativeEngine:
             # last resort
             Dp = _next_pow2(max(len(self.streams[s]["draft_delta"]) for s in active))
             if self._ensure_pool_blocks(active, acts, Tpad, Dp):
+                boundary_evicted = True
                 if not active:
-                    return []
+                    return None
                 pads = self._bucket_actions(acts)
                 Kp, L1p, L2p, Tpad = pads
+        # rewind coordinates + the draft pool's back frame (pipelined mode):
+        # abort_step can restore rng/draft state as if the step never began
+        C0 = {s: len(self.streams[s]["committed"]) - 1 for s in active}
+        rng_state = None
+        if self.pipeline:
+            rng_state = {s: copy.deepcopy(self.streams[s]["rng"].bit_generator.state)
+                         for s in active}
+            self.dpool.begin_frame()
         q0, hq = self._ingest_deltas(active)
         trees = self._draft_trees(active, acts, q0, pads)
-
-        events = []
         if self.strategy == "tree":
-            p_all, hid_all = self._target_tree_pass(active, trees, Tpad)
-            node_paths, accepted_by_slot, corr_by_slot = {}, {}, {}
+            p_dev, hid_dev = self._target_tree_dispatch(active, trees, Tpad)
+            return PendingStep(active=active, acts=acts, pads=pads, trees=trees,
+                               hq=hq, C0=C0, p_dev=p_dev, hid_dev=hid_dev,
+                               rng_state=rng_state, boundary_evicted=boundary_evicted)
+        snapshot, p_host = self._target_replay(active, trees, acts, Kp)
+        return PendingStep(active=active, acts=acts, pads=pads, trees=trees,
+                           hq=hq, C0=C0, snapshot=snapshot, p_host=p_host,
+                           rng_state=rng_state, boundary_evicted=boundary_evicted)
+
+    def finish_step(self, pending: PendingStep, pipeline_ahead: bool | None = None) -> list[dict]:
+        """The RETIRE half of a step: block on the tree-pass futures, verify
+        every stream on host, issue the ONE fused commit, and retire the
+        iteration (token bookkeeping, events, finishing done streams).
+
+        In pipelined mode (``pipeline_ahead`` defaults to ``self.pipeline``)
+        the next step is begun right after this one's verification+commit —
+        BEFORE the retirement bookkeeping — so the host tail runs while the
+        device already chews on step i+1.  Stall rule: an iteration that
+        retires a stream (reaches ``max_new``) must fully retire before the
+        next ``begin_step``, because releasing its pool row/blocks feeds the
+        next admission and pressure decisions; skipping ahead there would
+        change scheduling relative to the synchronous engine."""
+        if self.dpool.frame_held:
+            self.dpool.drop_frame()  # committing to this step: no rewind past here
+        active, trees, Tpad = pending.active, pending.trees, pending.pads[3]
+        accepted_by_slot, corr_by_slot = {}, {}
+        retire: list[tuple[int, dict]] = []
+        if self.strategy == "tree":
+            p_all = np.asarray(pending.p_dev)
+            hid_all = np.asarray(pending.hid_dev)
+            node_paths = {}
             for s in active:
                 tree = trees[s]
                 n = tree.n_nodes
@@ -821,31 +951,99 @@ class BatchedSpeculativeEngine:
                 node_path = node_paths[s]
                 last_node = node_path[-1] if node_path else 0
                 self.streams[s]["h_prev_p"] = hid_all[s, last_node]
-                events.append(
-                    self._advance_stream(s, trees[s], accepted_by_slot[s],
-                                         corr_by_slot[s], hq[s], node_path)
+                retire.append(
+                    (s, self._advance_stream(s, trees[s], accepted_by_slot[s],
+                                             corr_by_slot[s], pending.hq[s], node_path))
                 )
         else:
-            snapshot, p_host = self._target_replay(active, trees, acts, Kp)
-            accepted_by_slot, corr_by_slot = {}, {}
             for s in active:
                 tree = trees[s]
                 # verifier boundary: the float32 scores become the float64
                 # p-matrix the host verifiers consume
-                tree.p = p_host[s].astype(np.float64)
+                tree.p = pending.p_host[s].astype(np.float64)
                 accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
                 accepted_by_slot[s] = accepted
                 corr_by_slot[s] = int(corr)
-            hid_last = self._commit_replay(active, snapshot, accepted_by_slot)
+            hid_last = self._commit_replay(active, pending.snapshot, accepted_by_slot)
             for s in active:
                 self.streams[s]["h_prev_p"] = hid_last[s]
-                events.append(
-                    self._advance_stream(s, trees[s], accepted_by_slot[s], corr_by_slot[s], hq[s])
+                retire.append(
+                    (s, self._advance_stream(s, trees[s], accepted_by_slot[s],
+                                             corr_by_slot[s], pending.hq[s]))
                 )
-        return events
+        if pipeline_ahead is None:
+            pipeline_ahead = self.pipeline
+        if pipeline_ahead:
+            assert self._pending_next is None, "a begun-ahead step is already pending"
+            if any(ev["done"] for _, ev in retire):
+                # stall-and-drain: this iteration frees a row (and its
+                # blocks) — the release must land before the next boundary
+                self.counters["pipeline_stalls"] += 1
+            else:
+                self._pending_next = self.begin_step()
+                if self._pending_next is not None:
+                    self.counters["pipeline_ahead"] += 1
+        # retirement tail: release finished streams' rows/blocks.  In the
+        # pipeline-ahead case nothing here is scheduling-visible (no stream
+        # finished), so running it behind step i+1's device work is safe.
+        for s, ev in retire:
+            if ev["done"]:
+                self._finish(s)
+        return [ev for _, ev in retire]
+
+    def step(self) -> list[dict]:
+        """Admit queued requests, advance every active stream one speculative
+        block, and return per-request progress events.  Synchronous form of
+        begin_step + finish_step; in pipelined mode it first consumes the
+        step begun ahead by the previous ``finish_step`` (and surfaces any
+        events a mid-run ``submit`` retired on its behalf)."""
+        events, self._drained_events = self._drained_events, []
+        pending, self._pending_next = self._pending_next, None
+        if pending is None:
+            pending = self.begin_step()
+        if pending is None:
+            return events
+        return events + self.finish_step(pending)
+
+    def drain_pipeline(self) -> list[dict]:
+        """Finish the begun-ahead step WITHOUT beginning another — the drain
+        half of the stall-and-drain rule.  Call before out-of-band pool or
+        scheduling mutations (or at shutdown) so no dispatched work is left
+        in flight.  No-op (returns []) when nothing is pending."""
+        pending, self._pending_next = self._pending_next, None
+        if pending is None:
+            return []
+        return self.finish_step(pending, pipeline_ahead=False)
+
+    def abort_step(self, pending: PendingStep) -> None:
+        """Rewind a begun step as if it never dispatched (pipelined mode):
+        restore every active stream's rng snapshot, roll the draft pool back
+        to its double-buffered frame, and invalidate the target rows'
+        speculative tree writes (their pool buffer was donated, so the
+        pre-pass buffer is gone — but every speculative lane carries
+        pos >= C0 and is erased by ``CachePool.invalidate_from``; the replay
+        strategy never touches the target pool before its commit).  Boundary
+        decisions taken by ``begin_step`` (admissions, evictions, block
+        mappings) are scheduling events that stand; dead mappings are
+        recycled by the normal pressure path.  Work counters also stand —
+        they count dispatched work."""
+        assert pending.rng_state is not None, \
+            "abort_step needs the rng snapshots only pipelined begin_step records"
+        if pending is self._pending_next:
+            self._pending_next = None
+        for s, state in pending.rng_state.items():
+            if s in self.streams:
+                self.streams[s]["rng"].bit_generator.state = copy.deepcopy(state)
+        self.dpool.rollback_frame()
+        if self.strategy == "tree":
+            self.tpool.invalidate_from({s: pending.C0[s] for s in pending.active
+                                        if s in self.streams})
 
     def _advance_stream(self, slot, tree, accepted, corr, h_q, node_path=None):
-        """Book-keeping shared with SpeculativeEngine.step."""
+        """Token bookkeeping shared with SpeculativeEngine.step.  Marks the
+        stream done when it reaches ``max_new`` but does NOT release its pool
+        row — ``finish_step``'s retirement tail owns that, after the
+        pipeline-ahead decision."""
         st = self.streams[slot]
         nodes = (
             node_path if node_path is not None
@@ -864,7 +1062,7 @@ class BatchedSpeculativeEngine:
         ev = {"rid": st["rid"], "new_tokens": new_tokens,
               "done": len(st["out"]) >= st["max_new"]}
         if ev["done"]:
-            self._finish(slot)
+            st["done"] = True
         return ev
 
     # ----------------------------------------------------------------- run ---

@@ -20,7 +20,7 @@ verifier (property-tested against the core library).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -31,7 +31,7 @@ from repro.core.trees import DraftTree, tree_ancestor_mask
 from repro.core.traversal import verify_traversal
 from repro.core.verify import verify_bv, verify_naive_single, verify_topdown
 from repro.models.cache import fork_streams
-from repro.models.transformer import cache_length, forward, init_cache
+from repro.models.transformer import forward, init_cache
 from repro.sampling import warp_logits
 from repro.serving.serve_step import make_pool_commit_step, next_pow2
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delayed import LatencyModel
-from repro.core.selector import ActionSpace, make_scalar_features, select_action
+from repro.core.selector import make_scalar_features, select_action
 
 
 class NeuralSelector:

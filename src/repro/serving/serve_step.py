@@ -16,8 +16,6 @@ pool steps:      the continuous-batching forms over a per-stream cache pool
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +32,42 @@ def next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+class StagingBuffers:
+    """Reusable host staging buffers for the per-step index arrays.
+
+    Every pool step ships a handful of small int/bool arrays (tokens, parent
+    pointers, commit tables); staging them in preallocated numpy buffers
+    keeps the steady-state serving loop allocation-free on the host side.
+
+    ``banks`` > 1 double-buffers the staging itself: ``flip()`` rotates to
+    the next bank, so a pipelined engine refilling buffers for step i+1
+    never touches the bank step i's arrays were built from.  ``jnp.asarray``
+    copies host memory eagerly at dispatch today, so a single bank is safe
+    for the synchronous engine — the bank flip makes the pipelined engine's
+    no-overwrite contract explicit instead of resting on that copy timing.
+    """
+
+    def __init__(self, banks: int = 1):
+        assert banks >= 1
+        self._banks = banks
+        self._bank = 0
+        self._bufs: dict = {}
+
+    def flip(self) -> None:
+        """Rotate to the next bank (a pipelined ``begin_step`` boundary)."""
+        self._bank = (self._bank + 1) % self._banks
+
+    def get(self, name: str, shape: tuple, dtype, fill=0) -> np.ndarray:
+        """A zeroed (or ``fill``-initialised) buffer of the given shape from
+        the current bank, reused across steps with the same shape bucket."""
+        key = (self._bank, name, shape)
+        buf = self._bufs.get(key)
+        if buf is None:
+            buf = self._bufs[key] = np.empty(shape, dtype)
+        buf.fill(fill)
+        return buf
 
 
 def make_serve_step(cfg):

@@ -8,7 +8,6 @@ under heterogeneous prompt lengths, selector-driven heterogeneous tree
 shapes, and continuous admission (more requests than pool slots).
 """
 import jax
-import numpy as np
 import pytest
 
 from repro.models.config import ModelConfig

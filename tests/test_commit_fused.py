@@ -14,13 +14,12 @@ import types
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core.trees import tree_ancestor_mask
 from repro.kernels.commit_kv import commit_kv
 from repro.kernels.ref import commit_kv_ref
-from repro.models.cache import concat_streams, gather_streams, scatter_streams
+from repro.models.cache import concat_streams, scatter_streams
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_params
 from repro.serving.batch_engine import BatchedSpeculativeEngine

@@ -11,7 +11,6 @@ from repro.core.delayed import (
 )
 from repro.core.enumerate import (
     RandomModel,
-    expected_block_dist,
     iter_trees,
     mean_block_len,
 )

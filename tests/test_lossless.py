@@ -5,7 +5,6 @@ G(y) (the composed prefix probability, see core/enumerate.py) must match the
 target process for every string, for every verifier, on delayed trees of
 several (K, L1, L2) including root rollouts and pure paths.
 """
-import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
 

@@ -2,7 +2,6 @@
 launch/dryrun.py which this suite does not re-run)."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_smoke

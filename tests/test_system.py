@@ -1,7 +1,6 @@
 """System-level behaviour: the paper's qualitative claims reproduced at toy
 scale (these are the EXPERIMENTS.md §claims smoke-level counterparts)."""
 import numpy as np
-import pytest
 
 from repro.core.delayed import estimate_block_efficiency
 from repro.core.enumerate import RandomModel, expected_block_dist, mean_block_len
