@@ -4,7 +4,7 @@ with the pipelined stepping mode measured against both.
     PYTHONPATH=src python benchmarks/batch_throughput.py [--arch granite-8b]
         [--batch-sizes 1,4,8] [--max-new 24] [--verifier specinfer]
         [--ring] [--block-size 64] [--coresidency] [--no-pipeline]
-        [--json BENCH_batch_throughput.json]
+        [--data-shards 2] [--json BENCH_batch_throughput.json]
 
 For each batch size N, serves N synthetic requests three ways:
 
@@ -48,7 +48,10 @@ except ImportError:  # executed as a script: benchmarks/ itself is sys.path[0]
 from repro.configs import get_smoke
 from repro.launch.serve import make_draft_cfg
 from repro.models.transformer import init_params
-from repro.serving.batch_engine import BatchedSpeculativeEngine
+from repro.serving.batch_engine import (
+    BatchedSpeculativeEngine,
+    ShardedBatchedSpeculativeEngine,
+)
 from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
 
 
@@ -84,14 +87,23 @@ def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds, r
 
 
 def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
-                paged=True, block_size=64, pipeline=False, reps=1):
-    eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts),
-                                   paged=paged, block_size=block_size, pipeline=pipeline)
+                paged=True, block_size=64, pipeline=False, reps=1, data_shards=1):
+    if data_shards > 1:
+        eng = ShardedBatchedSpeculativeEngine(
+            cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts),
+            data_shards=data_shards, paged=paged, block_size=block_size,
+            pipeline=pipeline)
+    else:
+        eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
+                                       n_slots=len(prompts), paged=paged,
+                                       block_size=block_size, pipeline=pipeline)
+    engines = eng.shards if data_shards > 1 else [eng]
 
     def workload():
         # per-pass units: the reported overlap counters describe ONE
         # workload pass, like the commit/occupancy numbers they sit next to
-        eng.counters["pipeline_ahead"] = eng.counters["pipeline_stalls"] = 0
+        for e in engines:
+            e.counters["pipeline_ahead"] = e.counters["pipeline_stalls"] = 0
         rids = [eng.submit(list(p), max_new=max_new, seed=sd) for p, sd in zip(prompts, seeds)]
         outs = eng.run()
         return [outs[r]["tokens"] for r in rids]
@@ -114,14 +126,18 @@ def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
     eng.finished.clear()
     commit_stats = {k: eng.counters[k] for k in
                     ("commit_calls", "commit_ms", "blocks_peak", "blocks_reclaimed")}
+    # the per-shard peaks tell the scheduler-balance story the aggregate hides
+    shard_peaks = [e.counters["blocks_peak"] for e in engines] if data_shards > 1 else None
     # Timed pass: the steady-state serving loop, commits dispatched async.
     eng.profile_commits = False
-    for key in ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak",
-                "pipeline_ahead", "pipeline_stalls"):
-        eng.counters[key] = 0
+    for e in engines:
+        for key in ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak",
+                    "pipeline_ahead", "pipeline_stalls"):
+            e.counters[key] = 0
     outs, dt = _median_timed(workload, reps)
     counters = dict(eng.counters)
     counters.update(commit_stats)  # report the honest (blocked) commit numbers
+    counters["shard_blocks_peak"] = shard_peaks
     return outs, dt, counters, peak["occ"]
 
 
@@ -174,6 +190,12 @@ def main(argv=None):
     ap.add_argument("--ring", action="store_true",
                     help="benchmark the PR-1 per-stream ring pool instead of paged")
     ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="run the batched/pipelined columns through the "
+                         "sharded engine (N shard-local pools on the mesh "
+                         "data axis); per-shard occupancy is reported and "
+                         "the exactness column still pins outputs to the "
+                         "sequential engine")
     ap.add_argument("--coresidency", action="store_true",
                     help="run the long+short co-residency scenario instead of "
                          "the throughput sweep")
@@ -203,6 +225,8 @@ def main(argv=None):
 
     sizes = [int(s) for s in args.batch_sizes.split(",")]
     pool = "ring" if args.ring else f"paged(block={args.block_size})"
+    if args.data_shards > 1:
+        pool += f" x {args.data_shards} shards"
     print(f"arch={args.arch}(smoke) verifier={args.verifier} "
           f"action=({args.K},{args.L1},{args.L2}) max_new={args.max_new} pool={pool}")
     header = f"{'batch':>5} {'seq tok/s':>10} {'batched tok/s':>14}"
@@ -217,7 +241,8 @@ def main(argv=None):
                                       prompts, args.max_new, seeds, reps=args.reps)
         outs_b, dt_b, counters, occ = run_batched(
             cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
-            paged=not args.ring, block_size=args.block_size, reps=args.reps)
+            paged=not args.ring, block_size=args.block_size, reps=args.reps,
+            data_shards=args.data_shards)
         # actual emitted tokens (an evicted request returns fewer than
         # max_new); the exactness checks below pin all modes to this count
         tok = sum(len(o) for o in outs_s)
@@ -227,7 +252,7 @@ def main(argv=None):
             outs_p, dt_p, pcounters, _ = run_batched(
                 cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
                 paged=not args.ring, block_size=args.block_size, pipeline=True,
-                reps=args.reps)
+                reps=args.reps, data_shards=args.data_shards)
             pipe_exact = all(a == b for a, b in zip(outs_s, outs_p))
         rows.append((n, tok / dt_s, tok / dt_b,
                      tok / dt_p if dt_p else None, exact and pipe_exact))
@@ -240,6 +265,9 @@ def main(argv=None):
             pool_note = (f"   pool: {counters['blocks_peak']}/{t['blocks_total']} blocks peak"
                          f" (frag {t['fragmentation']:.2f}, "
                          f"reclaimed {counters['blocks_reclaimed']})")
+        if counters.get("shard_blocks_peak"):
+            pool_note += "   shard peaks: " + "/".join(
+                str(p) for p in counters["shard_blocks_peak"])
         line = f"{n:>5} {tok / dt_s:>10.2f} {tok / dt_b:>14.2f}"
         if dt_p:
             line += f" {tok / dt_p:>16.2f} {dt_b / dt_p:>8.2f}x"
@@ -266,6 +294,7 @@ def main(argv=None):
             "commit_ms": counters["commit_ms"],
             "blocks_peak": counters["blocks_peak"],
             "blocks_reclaimed": counters["blocks_reclaimed"],
+            "shard_blocks_peak": counters.get("shard_blocks_peak"),
             "pipeline_ahead": pcounters.get("pipeline_ahead"),
             "pipeline_stalls": pcounters.get("pipeline_stalls"),
         })
@@ -280,6 +309,7 @@ def main(argv=None):
                           "K": args.K, "L1": args.L1, "L2": args.L2,
                           "max_new": args.max_new, "batch_sizes": sizes,
                           "pool": pool, "block_size": args.block_size,
+                          "data_shards": args.data_shards,
                           "max_cache": ecfg.max_cache, "seed": args.seed},
                          json_rows)
         print(f"wrote {args.json}")

@@ -12,27 +12,41 @@
 #     pipelined engine must be at least at parity; the tolerance absorbs
 #     scheduler noise on shared CI runners — sub-second smoke walls swing
 #     a few percent run to run even at median-of-3),
-#   * the fused commit stops beating the sequential per-row commit.
+#   * the fused commit stops beating the sequential per-row commit,
+#   * the --data-shards 2 host-local run loses exactness, or its batched
+#     throughput falls below BENCH_SHARD_TOL x the single-shard batched
+#     throughput at 8 streams.  On ONE device the two shards serialize —
+#     two half-batch engines pay double per-call dispatch overhead at
+#     smoke scale, measured ~0.93x on an idle runner — so the sharded
+#     tolerance defaults looser (0.85): the gate exists to catch
+#     collapse (accidental recompiles, cross-shard serialization bugs),
+#     not to claim single-device parity.  On multi-device hosts the
+#     shards overlap and this gate is very conservative.
 #
-#   BENCH_OUT=dir  where to write the JSON artifacts (default bench_out/)
-#   BENCH_TOL=f    pipelined-vs-sync tolerance (default 0.93)
+#   BENCH_OUT=dir        where to write the JSON artifacts (default bench_out/)
+#   BENCH_TOL=f          pipelined-vs-sync tolerance (default 0.93)
+#   BENCH_SHARD_TOL=f    sharded-vs-single-shard tolerance (default 0.85)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 OUT="${BENCH_OUT:-bench_out}"
 TOL="${BENCH_TOL:-0.93}"
+SHARD_TOL="${BENCH_SHARD_TOL:-0.85}"
 mkdir -p "$OUT"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python benchmarks/batch_throughput.py --arch granite-8b --batch-sizes 8 \
     --max-new 12 --reps 3 --json "$OUT/BENCH_batch_throughput.json"
+python benchmarks/batch_throughput.py --arch granite-8b --batch-sizes 8 \
+    --max-new 12 --reps 3 --data-shards 2 --no-pipeline \
+    --json "$OUT/BENCH_batch_throughput_sharded.json"
 python benchmarks/commit_bench.py --streams 1,8 --iters 5 --layers 2 \
     --smax 128 --json "$OUT/BENCH_commit_bench.json"
 
-python - "$OUT" "$TOL" <<'EOF'
+python - "$OUT" "$TOL" "$SHARD_TOL" <<'EOF'
 import json
 import sys
 
-out, tol = sys.argv[1], float(sys.argv[2])
+out, tol, shard_tol = sys.argv[1], float(sys.argv[2]), float(sys.argv[3])
 
 with open(f"{out}/BENCH_batch_throughput.json", encoding="utf-8") as f:
     bt = json.load(f)
@@ -47,6 +61,18 @@ for row in bt["results"]:
         f"batch={n}: pipelined {tps['pipelined']:.1f} tok/s < {tol} x " \
         f"synchronous {tps['batched']:.1f} tok/s"
 
+with open(f"{out}/BENCH_batch_throughput_sharded.json", encoding="utf-8") as f:
+    sh = json.load(f)
+assert sh["config"]["data_shards"] == 2, "sharded run did not shard"
+ratios = []
+for row, base in zip(sh["results"], bt["results"]):
+    n = row["batch"]
+    assert row["exact"], f"data-shards batch={n}: sharded output diverged from sequential"
+    sharded, single = row["tokens_per_sec"]["batched"], base["tokens_per_sec"]["batched"]
+    assert sharded >= shard_tol * single, \
+        f"batch={n}: sharded {sharded:.1f} tok/s < {shard_tol} x single-shard {single:.1f} tok/s"
+    ratios.append(sharded / single)
+
 with open(f"{out}/BENCH_commit_bench.json", encoding="utf-8") as f:
     cb = json.load(f)
 assert cb["bench"] == "commit_bench" and cb["schema"] == 1, "unknown bench schema"
@@ -55,6 +81,7 @@ assert worst > 1.0, f"fused commit no longer beats the per-row chain ({worst:.2f
 
 pipe = [f"{r['tokens_per_sec']['pipelined'] / r['tokens_per_sec']['batched']:.2f}x"
         for r in bt["results"]]
-print(f"bench smoke OK: pipelined/sync {', '.join(pipe)}; "
+print(f"bench smoke OK: pipelined/sync {', '.join(pipe)}; sharded/single "
+      f"{', '.join(f'{r:.2f}x' for r in ratios)}; "
       f"fused commit worst case {worst:.2f}x over per-row")
 EOF

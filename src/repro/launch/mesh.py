@@ -1,4 +1,4 @@
-"""Production mesh definitions (TPU v5e pods).
+"""Production mesh definitions (TPU v5e pods) and serving data meshes.
 
 Defined as functions so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import).
@@ -6,6 +6,7 @@ state (the dry-run sets XLA_FLAGS before any jax import).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +22,37 @@ def data_axes(mesh) -> tuple:
 
 def axis_size(mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def make_data_mesh(n_shards: int, *, devices=None):
+    """A 1-axis ``("data",)`` mesh over ``n_shards`` distinct devices.
+
+    The strict SPMD form: a single pool whose stream axis carries a
+    ``NamedSharding`` over this mesh is physically split across the
+    devices.  Raises when the host does not have enough devices — use
+    :func:`shard_meshes` for the host-local fallback that cycles devices.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < n_shards:
+        raise ValueError(
+            f"a {n_shards}-shard data mesh needs {n_shards} devices, "
+            f"this host has {len(devices)}"
+        )
+    return jax.sharding.Mesh(np.asarray(devices[:n_shards]), ("data",))
+
+
+def shard_meshes(n_shards: int, *, devices=None) -> list:
+    """One single-device ``("data",)`` mesh per shard, cycling the local
+    devices — the host-local stand-in for one mesh slice per host.
+
+    Shard ``i``'s pool arrays are NamedSharding-committed to
+    ``devices[i % ndev]``: on a multi-device host the shards' pool steps
+    dispatch onto distinct devices and overlap, while on a single-device
+    container every shard shares device 0 (the smoke/test path, where the
+    sharded engine must stay token-identical to the unsharded one)."""
+    assert n_shards >= 1, n_shards
+    devices = list(devices if devices is not None else jax.devices())
+    return [
+        jax.sharding.Mesh(np.asarray([devices[i % len(devices)]]), ("data",))
+        for i in range(n_shards)
+    ]

@@ -13,6 +13,11 @@ slots free up — every model call advances all resident streams at once.
 Batched serving steps pipelined by default (each step's host verify/retire
 tail overlaps the next step's dispatched device work, token-identically);
 ``--no-pipeline`` restores strictly sequential steps.
+
+``--data-shards N`` splits the pool's stream axis into N shard engines
+(shard-local slots, block arenas, admission queues; pool arrays committed
+to the mesh data axis) under a least-loaded scheduler — token-identical to
+the unsharded pool for the same arrival order.
 """
 from __future__ import annotations
 
@@ -24,7 +29,10 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.models.transformer import init_params
-from repro.serving.batch_engine import BatchedSpeculativeEngine
+from repro.serving.batch_engine import (
+    BatchedSpeculativeEngine,
+    ShardedBatchedSpeculativeEngine,
+)
 from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
 
 
@@ -73,6 +81,11 @@ def main(argv=None):
     ap.add_argument("--streams", type=int, default=0,
                     help="continuous batching: serve through an N-slot cache pool "
                          "(0 = sequential single-stream engine)")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="shard the pool's stream axis across the mesh data "
+                         "axis: N shard engines with shard-local slots, block "
+                         "arenas and admission queues under a least-loaded "
+                         "scheduler (1 = the unsharded pool)")
     ap.add_argument("--block-size", type=int, default=64,
                     help="paged KV pool block size in tokens (rounded down to "
                          "the nearest power of two dividing max_cache)")
@@ -102,11 +115,18 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
 
     if args.streams:
-        eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
-                                       n_slots=args.streams, paged=not args.ring,
-                                       block_size=args.block_size,
-                                       pool_blocks=args.pool_blocks or None,
-                                       pipeline=args.pipeline)
+        if args.data_shards > 1:
+            eng = ShardedBatchedSpeculativeEngine(
+                cfg, tp, dcfg, dp, ecfg, sampling, n_slots=args.streams,
+                data_shards=args.data_shards, paged=not args.ring,
+                block_size=args.block_size,
+                pool_blocks=args.pool_blocks or None, pipeline=args.pipeline)
+        else:
+            eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
+                                           n_slots=args.streams, paged=not args.ring,
+                                           block_size=args.block_size,
+                                           pool_blocks=args.pool_blocks or None,
+                                           pipeline=args.pipeline)
         t0 = time.time()
         rids = [
             eng.submit(rng.integers(0, cfg.vocab, size=8).tolist(),
@@ -128,6 +148,11 @@ def main(argv=None):
             f"pipelined(ahead={c['pipeline_ahead']}, stalls={c['pipeline_stalls']})"
             if args.pipeline else "sync"
         )
+        if args.data_shards > 1:
+            per = [sh.counters["blocks_peak"] for sh in eng.shards]
+            stepping += (f" shards={args.data_shards}"
+                         f"(x{eng.n_slots // args.data_shards} slots, "
+                         f"peaks={per})")
         print(
             f"\n[batched x{args.streams}] verifier={args.verifier} "
             f"({args.K},{args.L1},{args.L2}) block_efficiency={be:.3f} "

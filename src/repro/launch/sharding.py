@@ -9,17 +9,25 @@ Scheme: 2D FSDP x tensor-parallel.
   * norms and scalars: replicated
   * the pod axis never shards parameters (pure data parallel across pods)
 
-Every rule is divisibility-guarded: an axis that does not divide is dropped
-(replicated) rather than erroring, so odd vocabularies (49155, 51865, 92553)
-lower cleanly.
+Every *parameter* rule is divisibility-guarded: an axis that does not divide
+is dropped (replicated) rather than erroring, so odd vocabularies (49155,
+51865, 92553) lower cleanly — but each drop is logged once per param class,
+so a mis-sized mesh cannot silently replicate half the model.  The KV-pool
+stream axis (``pool_specs``/``pool_shardings``) is the exception: a stream
+axis that does not divide the data axis is a hard error (pad ``n_slots`` up
+with :func:`pad_slots` rather than replicating a pool shard).
 """
 from __future__ import annotations
 
+import logging
 import re
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+_log = logging.getLogger(__name__)
+_logged_drops: set[tuple[str, str]] = set()
 
 # (param-name regex, per-ndim spec templates). Leading layer/group axes are
 # padded with None automatically: the template matches the TRAILING dims.
@@ -75,10 +83,20 @@ def _spec_for(path: str, shape: tuple, mesh, cfg=None) -> P:
         if re.search(r"(wq|bq|wo)$", name) and cfg.n_heads % msize != 0:
             tmpl = [None if a == "model" else a for a in tmpl]
     full = (None,) * (ndim - len(tmpl)) + tuple(tmpl)
-    # divisibility guard
+    # divisibility guard: drop (replicate) the axis, but say so once per
+    # param class — silent drops hid a half-replicated model more than once
     out = []
     for dim, ax in zip(shape, full):
         if ax is None or ax not in mesh.axis_names or dim % mesh.shape[ax] != 0:
+            if ax is not None and ax in mesh.axis_names:
+                key = (name, ax)
+                if key not in _logged_drops:
+                    _logged_drops.add(key)
+                    _log.warning(
+                        "sharding: param class %r drops axis %r (dim %d %% "
+                        "%s=%d != 0) -> replicated on that dim",
+                        name, ax, dim, ax, mesh.shape[ax],
+                    )
             out.append(None)
         else:
             out.append(ax)
@@ -202,3 +220,80 @@ def cache_shardings(mesh, cache_shapes, *, batch_sharded: bool):
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+# ------------------------------------------------------- KV-pool stream axis ---
+
+
+def pad_slots(n_slots: int, data: int) -> int:
+    """Round ``n_slots`` up to a multiple of the mesh data axis.
+
+    The pool's stream axis must divide the data axis EXACTLY (see
+    ``pool_specs``): a shard that cannot take a whole slice would have to be
+    replicated, silently doubling pool HBM and breaking the shard-local
+    free-list invariant — padding with idle rows is always cheaper."""
+    assert n_slots >= 1 and data >= 1, (n_slots, data)
+    return -(-n_slots // data) * data
+
+
+def pool_specs(mesh_axes: dict, cache: dict) -> dict:
+    """PartitionSpec pytree for a per-stream cache pool (models/cache.py).
+
+    The stream axis maps to ``"data"`` for every array family that has one
+    (attn k/v axis 1, pos/len/block_tbl axis 0, ssm/conv axis 1, hybrid
+    rec_* axis 2, tail_* axis 1); everything else replicates.  Unlike the
+    parameter rules, the stream axis is NOT divisibility-guard-dropped: a
+    pool whose ``n_slots`` does not divide the data axis is a hard error —
+    pad ``n_slots`` up with :func:`pad_slots` instead of replicating a pool
+    shard.  Paged arenas ((L, NBLK+1, block, Hkv, hd)) have no stream axis
+    (and an odd trash block), so they replicate here; the sharded engine
+    (serving/batch_engine.py ShardedBatchedSpeculativeEngine) gives every
+    shard a *private* arena + free list instead, which is what keeps block
+    allocation host-local.
+    """
+    assert "data" in mesh_axes, "pool sharding needs a mesh with a 'data' axis"
+    data = int(mesh_axes["data"])
+
+    def stream_spec(arr, axis: int) -> P:
+        dim = arr.shape[axis]
+        assert dim % data == 0, (
+            f"KV-pool stream axis of size {dim} does not divide the mesh data "
+            f"axis ({data}): pad n_slots with launch.sharding.pad_slots() "
+            f"instead of replicating a pool shard"
+        )
+        spec = [None] * len(arr.shape)
+        spec[axis] = "data"
+        return P(*spec)
+
+    out: dict = {}
+    for key, val in cache.items():
+        if key == "attn":
+            a: dict = {}
+            a["pos"] = stream_spec(val["pos"], 0) if val["pos"].ndim == 2 else P()
+            a["len"] = stream_spec(val["len"], 0) if val["len"].ndim == 1 else P()
+            if "block_tbl" in val:  # paged arena: blocks have no stream axis
+                a["k"], a["v"] = P(), P()
+                a["block_tbl"] = stream_spec(val["block_tbl"], 0)
+            else:
+                a["k"] = stream_spec(val["k"], 1)
+                a["v"] = stream_spec(val["v"], 1)
+            out[key] = a
+        elif key in ("rec_state", "rec_conv"):
+            out[key] = stream_spec(val, 2)
+        elif key in ("state", "conv", "tail_state", "tail_conv", "cross_k", "cross_v"):
+            out[key] = stream_spec(val, 1)
+        elif key == "len":
+            out[key] = stream_spec(val, 0) if val.ndim == 1 else P()
+        else:
+            out[key] = P()
+    return out
+
+
+def pool_shardings(mesh, cache: dict):
+    """NamedSharding pytree for a cache pool over ``mesh``'s data axis —
+    what ``make_cache_pool(..., sharding=...)`` commits the pool arrays to.
+    Works with concrete arrays or ShapeDtypeStructs."""
+    specs = pool_specs(dict(mesh.shape), cache)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )

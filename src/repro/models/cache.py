@@ -425,9 +425,20 @@ class CachePool:
     would hand the back buffer's storage to XLA.  ``rollback_frame()``
     restores the back buffer — the drain rule's rewind for a begun-but-
     abandoned pipelined step.
+
+    Sharded pools (``sharding`` != None, a NamedSharding pytree from
+    ``launch.sharding.pool_shardings``): the cache arrays are committed to
+    the mesh data axis at construction — the stream axis physically lives
+    where the sharding says.  Donated jit calls keep outputs on the same
+    devices, so one ``device_put`` here pins the whole pool lifecycle; host
+    index uploads that must land next to the pool (block-table pushes) are
+    re-committed through the stored sharding leaf.
     """
 
-    def __init__(self, cache: dict, n_slots: int):
+    def __init__(self, cache: dict, n_slots: int, sharding=None):
+        if sharding is not None:
+            cache = jax.device_put(cache, sharding)
+        self.sharding = sharding
         self.cache = cache
         self.n_slots = n_slots
         self._free = list(range(n_slots))
@@ -527,10 +538,10 @@ class PagedCachePool(CachePool):
       * ``release(slot)`` returns every block to the free list.
     """
 
-    def __init__(self, cache: dict, n_slots: int):
-        super().__init__(cache, n_slots)
+    def __init__(self, cache: dict, n_slots: int, sharding=None):
+        super().__init__(cache, n_slots, sharding=sharding)
         assert is_paged(cache), "PagedCachePool needs a paged attn cache"
-        attn = cache["attn"]
+        attn = self.cache["attn"]
         self.block = int(attn["k"].shape[2])
         self.max_blocks = int(attn["block_tbl"].shape[1])
         self.total_blocks = int(attn["k"].shape[1]) - 1  # minus trash
@@ -575,9 +586,14 @@ class PagedCachePool(CachePool):
     # --------------------------------------------------------- allocation ---
 
     def _sync_tbl(self) -> None:
+        tbl = jnp.asarray(self._tbl)
+        if self.sharding is not None:
+            # the table push must land on the pool's devices, or the next
+            # jitted pool step sees inputs committed across devices
+            tbl = jax.device_put(tbl, self.sharding["attn"]["block_tbl"])
         cache = dict(self.cache)
         cache["attn"] = dict(cache["attn"])
-        cache["attn"]["block_tbl"] = jnp.asarray(self._tbl)
+        cache["attn"]["block_tbl"] = tbl
         self.cache = cache
 
     def ensure(self, slot: int, upto: int, sync: bool = True) -> bool:
@@ -679,7 +695,10 @@ class PagedCachePool(CachePool):
         return slot
 
 
-def make_cache_pool(cache: dict, n_slots: int) -> CachePool:
+def make_cache_pool(cache: dict, n_slots: int, sharding=None) -> CachePool:
     """Pool factory: paged pools for paged caches, ring pools otherwise
-    (pure-recurrent caches have no attn component to page)."""
-    return PagedCachePool(cache, n_slots) if is_paged(cache) else CachePool(cache, n_slots)
+    (pure-recurrent caches have no attn component to page).  ``sharding``
+    (a ``launch.sharding.pool_shardings`` pytree) commits the pool arrays
+    to the mesh data axis at construction."""
+    cls = PagedCachePool if is_paged(cache) else CachePool
+    return cls(cache, n_slots, sharding=sharding)

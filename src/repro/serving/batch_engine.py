@@ -57,6 +57,14 @@ Scheduling: admission is FIFO (``submit`` queues, free slots admit); a stream
 is evicted (finished early) when its context can no longer fit a speculation
 block in its cache ring.  ``launch/serve.py --streams N`` drives this engine.
 
+Sharded streams (``ShardedBatchedSpeculativeEngine``, docs/serving.md
+"Sharded streams"): the pool's stream axis is embarrassingly parallel, so
+it shards across a mesh "data" axis — contiguous slot shards, each a full
+engine over its own rows/arena/free-lists/admission-queue with its pool
+arrays NamedSharding-committed to its mesh slice, under a shared
+least-loaded scheduler.  No cross-shard state exists beyond the routing
+decision, which is the property that scales the pool past one chip's HBM.
+
 Pipelined stepping (``pipeline=True``, docs/serving.md "Pipelined stepping"):
 ``step()`` is built from two halves — ``begin_step()`` runs the scheduling
 boundary (admission, capacity eviction, paged block mapping) and dispatches
@@ -86,6 +94,8 @@ import numpy as np
 
 from repro.core.traversal import delayed_structure
 from repro.core.trees import DraftTree
+from repro.launch.mesh import shard_meshes
+from repro.launch.sharding import pad_slots, pool_shardings
 from repro.models.cache import (
     PagedCachePool,
     concat_streams,
@@ -101,6 +111,7 @@ from repro.serving.engine import (
     SamplingParams,
     SpeculativeEngine,
     draw_token,
+    to_verifier_dtype,
     verify_tree,
 )
 from repro.serving.serve_step import (
@@ -169,7 +180,7 @@ class BatchedSpeculativeEngine:
                  ecfg: EngineConfig, sampling: SamplingParams | None = None,
                  selector=None, n_slots: int = 4, paged: bool = True,
                  block_size: int = 64, pool_blocks: int | None = None,
-                 pipeline: bool = False):
+                 pipeline: bool = False, mesh=None, shard_id: int = 0):
         assert target_cfg.vocab == draft_cfg.vocab
         assert n_slots >= 1, f"need at least one pool slot, got {n_slots}"
         assert target_cfg.arch_type not in ("encdec", "vlm"), \
@@ -177,17 +188,20 @@ class BatchedSpeculativeEngine:
         assert not ecfg.verify_on_device, \
             "batched serving verifies per-stream on host (verify_on_device consumes " \
             "randomness differently and would break batch-vs-single exactness)"
-        # selectors must be pure functions of stream state (NeuralSelector,
-        # StaticSelector); AnalyticSelector's peek_* oracle API is
-        # single-stream only
-        assert type(selector).__name__ != "AnalyticSelector", \
-            "AnalyticSelector needs the single-stream peek_draft/target_dist oracles"
         self.tc, self.tp = target_cfg, target_params
         self.dc, self.dp = draft_cfg, draft_params
         self.ecfg = ecfg
         self.sampling = sampling or SamplingParams()
         self.selector = selector
         self.n_slots = n_slots
+        # mesh: a jax mesh whose "data" axis carries this engine's pool
+        # stream axis (launch/sharding.pool_shardings commits the pool
+        # arrays to it; n_slots must divide the axis — pad_slots).  The
+        # sharded engine hands every shard its own single-device mesh slice
+        # (launch/mesh.shard_meshes); a multi-device data mesh on one
+        # engine shards the one pool SPMD-style instead.
+        self.mesh = mesh
+        self.shard_id = shard_id
         self.strategy = "replay" if target_cfg.arch_type in RECURRENT else "tree"
         smax = ecfg.max_cache
         page = None
@@ -205,10 +219,14 @@ class BatchedSpeculativeEngine:
             assert pool_blocks >= 1, "the arena needs at least one usable block"
             self.pool_blocks = pool_blocks
             page = (pool_blocks, bs)
+        tcache = init_cache(target_cfg, n_slots, smax, per_stream=True, page=page)
+        dcache = init_cache(draft_cfg, n_slots, smax, per_stream=True, page=page)
         self.tpool = make_cache_pool(
-            init_cache(target_cfg, n_slots, smax, per_stream=True, page=page), n_slots)
+            tcache, n_slots,
+            sharding=pool_shardings(mesh, tcache) if mesh is not None else None)
         self.dpool = make_cache_pool(
-            init_cache(draft_cfg, n_slots, smax, per_stream=True, page=page), n_slots)
+            dcache, n_slots,
+            sharding=pool_shardings(mesh, dcache) if mesh is not None else None)
         # pure-recurrent caches have no attn component to page
         self.paged = isinstance(self.tpool, PagedCachePool) or isinstance(self.dpool, PagedCachePool)
         self.streams: dict[int, dict] = {}  # slot -> stream state
@@ -351,6 +369,22 @@ class BatchedSpeculativeEngine:
                                        self.ecfg.seed if seed is None else seed))
         return rid
 
+    def can_admit(self, prompt_len: int) -> bool:
+        """Whether a fresh request of ``prompt_len`` tokens could be admitted
+        at the NEXT scheduling boundary without queueing: a free pool row, an
+        empty FIFO (admission is strictly in order), and — paged — enough
+        free blocks for its context plus one speculation bucket.  Dead-tail
+        reclamation is deliberately not counted: the scheduler routing on
+        this probe (ShardedBatchedSpeculativeEngine) must not promise
+        capacity that a resident stream's next step could take back."""
+        if self.queue or not self.tpool.free_slots or not self.dpool.free_slots:
+            return False
+        if self.paged:
+            need = self._admit_need(prompt_len)
+            if any(p.free_blocks < need for p in self._paged_pools()):
+                return False
+        return True
+
     def _prefill_row(self, cfg, params, ctx, name: str):
         """Prefill a fresh 1-row per-stream cache with ``ctx`` tokens."""
         row = init_cache(cfg, 1, self.ecfg.max_cache, per_stream=True)
@@ -417,6 +451,7 @@ class BatchedSpeculativeEngine:
             self._admit_seq += 1
             self.streams[slot] = {
                 "rid": req.rid,
+                "slot": slot,
                 "seq": self._admit_seq,
                 "rng": np.random.default_rng(req.seed),
                 "max_new": req.max_new,
@@ -940,7 +975,7 @@ class BatchedSpeculativeEngine:
             for s in active:
                 tree = trees[s]
                 n = tree.n_nodes
-                tree.p = p_all[s, :n].astype(np.float64)
+                tree.p = to_verifier_dtype(p_all[s, :n])
                 accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
                 accepted_by_slot[s] = accepted
                 corr_by_slot[s] = int(corr)
@@ -958,9 +993,7 @@ class BatchedSpeculativeEngine:
         else:
             for s in active:
                 tree = trees[s]
-                # verifier boundary: the float32 scores become the float64
-                # p-matrix the host verifiers consume
-                tree.p = pending.p_host[s].astype(np.float64)
+                tree.p = to_verifier_dtype(pending.p_host[s])
                 accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
                 accepted_by_slot[s] = accepted
                 corr_by_slot[s] = int(corr)
@@ -1065,6 +1098,36 @@ class BatchedSpeculativeEngine:
             st["done"] = True
         return ev
 
+    # ------------------------------------------------------ distribution peeks
+
+    def _peek(self, cfg, params, pool, slot: int, toks: list[int], name: str):
+        """Score ``toks`` against one pool row WITHOUT mutating the pool:
+        gather the row to a dense 1-row cache (paged rows come back dense),
+        decode, discard the advanced copy.  The pooled form of the
+        single-stream peek oracles — compiled once per token-length bucket."""
+        sub = gather_streams(pool.cache, [slot])
+        T = len(toks)
+        fn = self._jit(f"{name}_peek_{T}", partial(forward, cfg=cfg, mode="decode"))
+        logits, _, _ = fn(params, tokens=jnp.asarray(np.asarray(toks, np.int32)[None]),
+                          cache=sub)
+        return np.asarray(self._warp(logits[0]))[-1]
+
+    def peek_draft_dist(self, stream, ctx: list[int]) -> np.ndarray:
+        """q(. | committed + ctx) for a pooled stream, functional.
+
+        With the single-stream peeks this unblocks AnalyticSelector under
+        continuous batching (the ROADMAP "Batched analytic selector" item).
+        Note the selector itself draws from its OWN rng, shared across the
+        streams it serves — its decisions are deterministic per arrival
+        order, but not reproduced by independent single-stream runs."""
+        toks = list(stream["draft_delta"]) + list(ctx)
+        return self._peek(self.dc, self.dp, self.dpool, stream["slot"], toks, "drf")
+
+    def peek_target_dist(self, stream, ctx: list[int]) -> np.ndarray:
+        """p(. | committed + ctx) for a pooled stream, functional."""
+        toks = [stream["pending"]] + list(ctx)
+        return self._peek(self.tc, self.tp, self.tpool, stream["slot"], toks, "tgt")
+
     # ----------------------------------------------------------------- run ---
 
     def run(self) -> dict[int, dict]:
@@ -1099,3 +1162,227 @@ class BatchedSpeculativeEngine:
         ]
         out = self.run()
         return [out[r]["tokens"] for r in rids]
+
+
+class ShardedBatchedSpeculativeEngine:
+    """Stream axis sharded across a data mesh: the continuous-batching pool
+    split into ``data_shards`` contiguous slot shards, each an independent
+    ``BatchedSpeculativeEngine`` over its own rows and (paged) its own
+    private block arena — shard-local free lists, host-mirrored
+    pos/len/block tables, admission FIFO, pressure reclamation and
+    eviction — with every shard's pool arrays NamedSharding-committed to
+    its slice of the mesh data axis (launch/mesh.shard_meshes;
+    launch/sharding.pool_shardings).  On a multi-device host the shards'
+    pool steps dispatch onto distinct devices and overlap; on one device
+    they serialize but stay token-identical (the host-local smoke path).
+
+    The only cross-shard state is the scheduler: ``submit()`` routes each
+    request to the least-loaded shard that can admit it now
+    (``can_admit`` — free row, empty FIFO, free blocks), falling back to
+    least-loaded overall, deterministically in arrival order.  Requests
+    never migrate; retirement, eviction and block recycling read and write
+    nothing outside their shard — which is exactly what lets each shard
+    live on its own host with no coherence traffic beyond routing.
+
+    Exactness (property-tested in tests/test_sharding.py): a stream's
+    tokens depend only on its own seed and its shard's model calls, and
+    padded pool calls are bit-identical regardless of co-resident rows —
+    so for the same arrival order the sharded engine emits exactly the
+    unsharded engine's tokens, for both strategies, both verifiers,
+    synchronous and pipelined stepping.  Scheduling-dependent *truncation*
+    (eviction) also coincides whenever the eviction bound is per-stream
+    (capacity eviction with homogeneous actions); block-pressure eviction
+    is shard-local by design and compared against per-shard expectations
+    instead (docs/serving.md "Sharded streams").
+
+    ``n_slots`` that does not divide ``data_shards`` is padded UP
+    (launch/sharding.pad_slots) — idle rows cost padding lanes, a
+    replicated shard would cost HBM and the shard-local free-list
+    invariant.  A given total ``pool_blocks`` is split evenly (ceil) so
+    every shard's arena gates its own admissions.
+    """
+
+    def __init__(self, target_cfg, target_params, draft_cfg, draft_params,
+                 ecfg: EngineConfig, sampling: SamplingParams | None = None,
+                 selector=None, n_slots: int = 4, data_shards: int = 2,
+                 paged: bool = True, block_size: int = 64,
+                 pool_blocks: int | None = None, pipeline: bool = False,
+                 meshes=None):
+        assert data_shards >= 1, data_shards
+        self.data_shards = data_shards
+        self.n_slots = pad_slots(n_slots, data_shards)
+        per_slots = self.n_slots // data_shards
+        per_blocks = None
+        if paged and pool_blocks is not None:
+            per_blocks = -(-pool_blocks // data_shards)
+        if meshes is None:
+            meshes = shard_meshes(data_shards)
+        assert len(meshes) == data_shards, (len(meshes), data_shards)
+        self.shards = [
+            BatchedSpeculativeEngine(
+                target_cfg, target_params, draft_cfg, draft_params, ecfg,
+                sampling, selector=selector, n_slots=per_slots, paged=paged,
+                block_size=block_size, pool_blocks=per_blocks,
+                pipeline=pipeline, mesh=meshes[i], shard_id=i)
+            for i in range(data_shards)
+        ]
+        s0 = self.shards[0]
+        self.paged, self.strategy, self.pipeline = s0.paged, s0.strategy, pipeline
+        self.ecfg = ecfg
+        if s0.paged:
+            self.block_size = s0.block_size
+            self.pool_blocks = s0.pool_blocks * data_shards
+        self.finished: dict[int, dict] = {}
+        self._next_rid = 0
+        self._local: dict[int, tuple[int, int]] = {}   # global rid -> (shard, local rid)
+        self._global: dict[tuple[int, int], int] = {}  # (shard, local rid) -> global rid
+
+    # --------------------------------------------------------- scheduling ---
+
+    def _route(self, prompt_len: int) -> int:
+        """Least-loaded shard that can admit now; least-loaded overall when
+        none can (the request queues there).  Load = resident + queued, ties
+        to the lowest shard id — a pure function of arrival order, so the
+        schedule (and therefore any eviction truncation) is deterministic."""
+        admitting = [i for i, sh in enumerate(self.shards)
+                     if sh.can_admit(prompt_len)]
+        pool = admitting or range(self.data_shards)
+        return min(pool, key=lambda i: (len(self.shards[i].streams)
+                                        + len(self.shards[i].queue), i))
+
+    def shard_of(self, rid: int) -> int:
+        """Which shard a live (unfinished) request was routed to."""
+        return self._local[rid][0]
+
+    def submit(self, prompt: list[int], max_new: int = 64, seed: int | None = None) -> int:
+        si = self._route(len(prompt))
+        lrid = self.shards[si].submit(prompt, max_new=max_new, seed=seed)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._local[rid] = (si, lrid)
+        self._global[(si, lrid)] = rid
+        return rid
+
+    def _collect(self, si: int, events: list[dict]) -> list[dict]:
+        """Rewrite a shard's events/finished payloads to global rids."""
+        out = []
+        for ev in events:
+            ev = dict(ev)
+            ev["rid"] = self._global[(si, ev["rid"])]
+            out.append(ev)
+        sh = self.shards[si]
+        while sh.finished:
+            lrid, info = sh.finished.popitem()
+            rid = self._global.pop((si, lrid))
+            del self._local[rid]
+            self.finished[rid] = info
+        return out
+
+    # --------------------------------------------------------------- steps ---
+
+    def step(self) -> list[dict]:
+        """Advance every shard one speculative block (shard order is fixed;
+        shards are independent, so order affects wall-clock only)."""
+        events = []
+        for si, sh in enumerate(self.shards):
+            events.extend(self._collect(si, sh.step()))
+        return events
+
+    def drain_pipeline(self) -> list[dict]:
+        """Drain every shard's begun-ahead step (see
+        BatchedSpeculativeEngine.drain_pipeline)."""
+        events = []
+        for si, sh in enumerate(self.shards):
+            events.extend(self._collect(si, sh.drain_pipeline()))
+        return events
+
+    def run(self) -> dict[int, dict]:
+        """Drain all shards; returns ``{rid: {"tokens", "reason"}}`` for the
+        requests completed by this call (global rids)."""
+        done: dict[int, dict] = {}
+
+        def drain():
+            while self.finished:
+                rid, info = self.finished.popitem()
+                done[rid] = info
+
+        drain()
+        while any(sh.queue or sh.streams for sh in self.shards):
+            before = len(done)
+            self.step()
+            drain()
+            if not any(sh.queue or sh.streams for sh in self.shards):
+                break
+            assert any(sh.streams for sh in self.shards) or len(done) > before, \
+                "sharded scheduler stalled"
+        return done
+
+    def generate_batch(self, prompts, max_new: int = 32, seeds=None) -> list[list[int]]:
+        """Convenience: submit all prompts, drain, return outputs in order."""
+        rids = [
+            self.submit(list(p), max_new, None if seeds is None else seeds[i])
+            for i, p in enumerate(prompts)
+        ]
+        out = self.run()
+        return [out[r]["tokens"] for r in rids]
+
+    # ------------------------------------------------------------ counters ---
+
+    @property
+    def counters(self) -> dict:
+        """Work/overlap counters summed across shards (read-only view; use
+        ``reset_counters`` or the per-shard dicts to mutate)."""
+        out: dict = {}
+        for sh in self.shards:
+            for key, val in sh.counters.items():
+                out[key] = out.get(key, type(val)()) + val
+        return out
+
+    def reset_counters(self, keys) -> None:
+        for sh in self.shards:
+            for key in keys:
+                sh.counters[key] = type(sh.counters[key])()
+
+    @property
+    def profile_commits(self) -> bool:
+        return self.shards[0].profile_commits
+
+    @profile_commits.setter
+    def profile_commits(self, value: bool) -> None:
+        for sh in self.shards:
+            sh.profile_commits = value
+
+    @property
+    def queue(self) -> list:
+        """All shards' queued requests (routing already fixed their shard)."""
+        return [req for sh in self.shards for req in sh.queue]
+
+    @property
+    def streams(self) -> dict:
+        """(shard, slot) -> stream state across shards, for observability."""
+        return {(si, s): st for si, sh in enumerate(self.shards)
+                for s, st in sh.streams.items()}
+
+    def pool_occupancy(self) -> dict:
+        """Aggregate arena occupancy in the unsharded schema, plus the
+        per-shard breakdown benchmarks surface (the whole point of the
+        shard counters: a balanced scheduler shows near-equal per-shard
+        peaks)."""
+        per = [sh.pool_occupancy() for sh in self.shards]
+        out: dict = {}
+        for name in ("target", "draft"):
+            shards = [p[name] for p in per if name in p]
+            if not shards:
+                continue
+            used = sum(s["blocks_used"] for s in shards)
+            out[name] = {
+                "blocks_total": sum(s["blocks_total"] for s in shards),
+                "blocks_used": used,
+                "blocks_free": sum(s["blocks_free"] for s in shards),
+                "block_size": shards[0]["block_size"],
+                "fragmentation": (sum(s["fragmentation"] * s["blocks_used"]
+                                      for s in shards) / used) if used else 0.0,
+            }
+        if out:
+            out["per_shard"] = per
+        return out

@@ -37,6 +37,19 @@ from repro.serving.serve_step import make_pool_commit_step, next_pow2
 
 TOPDOWN = {"nss", "naive", "naivetree", "spectr", "specinfer", "khisti"}
 
+VERIFIER_DTYPE = np.float64
+
+
+def to_verifier_dtype(p: np.ndarray) -> np.ndarray:
+    """Cast warped target scores to the dtype the host verifiers consume.
+
+    The ONE verifier-boundary cast shared by both engines and both
+    target-pass strategies: verification compares p/q ratios against
+    uniform draws in float64, and the cast must live in exactly one place —
+    the replay path once hand-rolled its own and drifted (PR-2 notes), which
+    a future dtype change would silently repeat."""
+    return np.asarray(p, VERIFIER_DTYPE)
+
 
 def draw_token(rng: np.random.Generator, dist: np.ndarray) -> int:
     """Sample one token from a warped distribution.
@@ -347,7 +360,7 @@ class SpeculativeEngine:
 
         if self.strategy == "tree":
             p_dists, tcache, hid = self._target_pass_tree(stream["tcache"], tree_tok, anc)
-            tree.p = p_dists.astype(np.float64)
+            tree.p = to_verifier_dtype(p_dists)
             accepted, corr = self._verify(tree)
             node_path = self._accepted_nodes(tree, accepted)
             stream["tcache"] = self._commit_tree_cache(tcache, C, node_path, T)
@@ -378,7 +391,7 @@ class SpeculativeEngine:
         snapshot = stream["tcache"]  # committed checkpoint (functional arrays)
         trunk_tokens = [int(tree_tok[0])] + [int(tree.tokens[v]) for v in trunk]
         p_seq, cache_after_trunk, hid = self._target_decode(snapshot, trunk_tokens)
-        p = np.zeros((tree.n_nodes, tree.vocab))
+        p = np.zeros((tree.n_nodes, tree.vocab), VERIFIER_DTYPE)
         p[0] = p_seq[0]
         for i, v in enumerate(trunk):
             p[v] = p_seq[i + 1]

@@ -81,14 +81,26 @@ class AnalyticSelector:
     def __call__(self, stream, engine):
         from repro.core.delayed import estimate_block_efficiency
 
-        # model oracles over *contexts relative to the committed prefix*
+        # model oracles over *contexts relative to the committed prefix*.
+        # Both engines provide them now (the batched engine peeks a gathered
+        # pool row); anything else must fail LOUDLY — degrading to a default
+        # action here would silently un-do the selector the caller asked for.
+        peek_q = getattr(engine, "peek_draft_dist", None)
+        peek_p = getattr(engine, "peek_target_dist", None)
+        if peek_q is None or peek_p is None:
+            raise TypeError(
+                f"AnalyticSelector needs peek_draft_dist/peek_target_dist "
+                f"oracles, which {type(engine).__name__} does not provide; "
+                f"use SpeculativeEngine or BatchedSpeculativeEngine, or switch "
+                f"to NeuralSelector/StaticSelector"
+            )
         base = list(stream["committed"])
 
         def q_fn(ctx):
-            return engine.peek_draft_dist(stream, list(ctx))
+            return peek_q(stream, list(ctx))
 
         def p_fn(ctx):
-            return engine.peek_target_dist(stream, list(ctx))
+            return peek_p(stream, list(ctx))
 
         best, best_tps = self.actions[0], -1.0
         l = len(base)

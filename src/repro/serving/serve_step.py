@@ -47,6 +47,11 @@ class StagingBuffers:
     copies host memory eagerly at dispatch today, so a single bank is safe
     for the synchronous engine — the bank flip makes the pipelined engine's
     no-overwrite contract explicit instead of resting on that copy timing.
+
+    Staging is strictly per-engine: every shard of a sharded engine
+    (ShardedBatchedSpeculativeEngine) owns its own instance, so its
+    (per-shard-sized) tree/commit index arrays and bank rotation can never
+    alias another shard's — shard isolation by construction, not by key.
     """
 
     def __init__(self, banks: int = 1):

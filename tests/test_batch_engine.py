@@ -150,6 +150,62 @@ def test_eviction_on_cache_pressure(dense_models):
     assert len(out[rid2]["tokens"]) == 4
 
 
+def test_pooled_peeks_match_single_engine(dense_models):
+    """The pooled peek oracles (a gathered row, functionally decoded) score
+    the same distributions as the single-stream engine's peeks."""
+    import numpy as np
+
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=64, seed=5)
+    single = SpeculativeEngine(tc, tp, dc, dp, ecfg)
+    stream = single.new_stream([1, 2, 3])
+    beng = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=2)
+    beng.submit([1, 2, 3], max_new=8, seed=5)
+    # advance both one block with identical rng state, then peek
+    beng.step()
+    single.step(stream)
+    bstream = next(iter(beng.streams.values()))
+    assert bstream["committed"] == stream["committed"]
+    for ctx in ([], [7], [7, 11]):
+        np.testing.assert_allclose(beng.peek_target_dist(bstream, ctx),
+                                   single.peek_target_dist(stream, ctx),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(beng.peek_draft_dist(bstream, ctx),
+                                   single.peek_draft_dist(stream, ctx),
+                                   rtol=1e-5, atol=1e-6)
+    # peeks are functional: the pool state they read is unchanged
+    assert bstream["committed"] == stream["committed"]
+
+
+@pytest.mark.slow
+def test_analytic_selector_runs_batched(dense_models):
+    """AnalyticSelector's Eq. 9 argmax runs under continuous batching now
+    that the engine provides pooled peek oracles (it used to be rejected
+    at construction and silently unusable on pooled streams)."""
+    from repro.core.delayed import LatencyModel
+    from repro.serving.nde import AnalyticSelector
+
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=64)
+    sel = AnalyticSelector([(1, 1, 0), (2, 1, 1)],
+                           LatencyModel(1e-4, 0.0, 1e-3, 0.0), "specinfer", s=1)
+    beng = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, selector=sel, n_slots=2)
+    outs = beng.generate_batch([[1, 2, 3], [4, 5]], max_new=4, seeds=[1, 2])
+    assert [len(o) for o in outs] == [4, 4]
+
+
+def test_analytic_selector_fails_loud_without_peeks():
+    """An engine without peek oracles must raise, not silently degrade the
+    selection to a default action."""
+    from repro.core.delayed import LatencyModel
+    from repro.serving.nde import AnalyticSelector
+
+    sel = AnalyticSelector([(2, 1, 1)], LatencyModel(1e-4, 0.0, 1e-3, 0.0),
+                           "specinfer", s=1)
+    with pytest.raises(TypeError, match="peek_draft_dist"):
+        sel({"committed": [1, 2]}, object())
+
+
 def test_long_prompt_prefill_does_not_wrap(dense_models):
     """Prompt-pad bucketing must cap at the ring size (regression: a
     21-token prompt in a 24-slot ring padded to 32 and wrapped onto its own
