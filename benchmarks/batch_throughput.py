@@ -24,8 +24,11 @@ steady-state serving loop.  The warmup pass doubles as the commit profiler
 (it blocks on every fused commit for an honest ``commit_ms``) and as the
 occupancy probe; the timed pass runs unblocked, so commit dispatches
 overlap host work exactly as they do in production for BOTH stepping
-modes.  Outputs are seeded identically, so the batched and pipelined
-columns also re-check the exactness contract while they measure.
+modes.  The batched and pipelined timed reps are interleaved in
+alternating order (``_interleaved_timed``) so machine drift cannot
+masquerade as a stepping-mode difference.  Outputs are seeded
+identically, so the batched and pipelined columns also re-check the
+exactness contract while they measure.
 
 ``--json`` writes the machine-readable ``BENCH_batch_throughput.json``
 document (benchmarks/common.py ``write_bench_json``) that
@@ -34,7 +37,6 @@ scripts/bench_smoke.sh gates CI on and benchmarks/baselines/ archives.
 from __future__ import annotations
 
 import argparse
-import statistics
 import time
 
 import jax
@@ -60,16 +62,39 @@ def _prompts(n, vocab, seed=0):
     return [rng.integers(0, vocab, size=6).tolist() for _ in range(n)]
 
 
-def _median_timed(workload, reps):
-    """Median wall-clock over ``reps`` repeats of a deterministic workload —
-    the tiny smoke configs finish in fractions of a second, where scheduler
-    noise swamps single-shot timings."""
+def _best_timed(workload, reps):
+    """Minimum wall-clock over ``reps`` repeats of a deterministic workload.
+    The tiny smoke configs finish in fractions of a second, where scheduler
+    noise swamps single-shot timings; the minimum is the standard low-noise
+    estimator (cf. ``timeit``) because interruptions — GC, page faults,
+    noisy CI neighbours — only ever ADD time to a deterministic run."""
     times, outs = [], None
     for _ in range(reps):
         t0 = time.time()
         outs = workload()
         times.append(time.time() - t0)
-    return outs, statistics.median(times)
+    return outs, min(times)
+
+
+def _interleaved_timed(workloads, reps):
+    """Time several workloads rep-by-rep in alternating order (the order
+    flips every round).  Sequential per-mode timing lets slow machine drift
+    (thermal throttling, noisy neighbours) land entirely on whichever mode
+    runs last — exactly the bias that made the pipelined column look slower
+    than batched.  Interleaving spreads drift across all modes and the
+    per-mode minimum (see ``_best_timed``) discards what noise remains.
+    Returns ``{name: (outs, best_secs)}``."""
+    times = {name: [] for name in workloads}
+    outs = {}
+    for rnd in range(reps):
+        order = list(workloads)
+        if rnd % 2:
+            order.reverse()
+        for name in order:
+            t0 = time.time()
+            outs[name] = workloads[name]()
+            times[name].append(time.time() - t0)
+    return {name: (outs[name], min(times[name])) for name in workloads}
 
 
 def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds, reps=1):
@@ -83,11 +108,25 @@ def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds, r
         return outs
 
     workload()  # warm every shape the workload compiles
-    return _median_timed(workload, reps)
+    return _best_timed(workload, reps)
 
 
-def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
-                paged=True, block_size=64, pipeline=False, reps=1, data_shards=1):
+_OVERLAP_KEYS = ("pipeline_ahead", "pipeline_stalls", "pipeline_iterations")
+_WARM_KEYS = ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak") \
+    + _OVERLAP_KEYS
+
+
+def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
+                    paged=True, block_size=64, pipeline=False, data_shards=1):
+    """Build a batched (or sharded) engine, run the warmup/profiling pass and
+    return ``(eng, workload, commit_stats, peak_occ)`` ready for timing.
+
+    The warmup pass compiles every shape bucket, profiles commits honestly
+    (``profile_commits`` blocks on each fused commit — doing that in the
+    timed pass would serialize the very overlap the pipeline exists to
+    create) and probes pool occupancy whenever the used-block peak advances.
+    The workload repeats deterministically, so the warmup's commit cost and
+    peak occupancy are the timed pass's too."""
     if data_shards > 1:
         eng = ShardedBatchedSpeculativeEngine(
             cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts),
@@ -102,18 +141,11 @@ def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
     def workload():
         # per-pass units: the reported overlap counters describe ONE
         # workload pass, like the commit/occupancy numbers they sit next to
-        for e in engines:
-            e.counters["pipeline_ahead"] = e.counters["pipeline_stalls"] = 0
+        eng.reset_counters(_OVERLAP_KEYS)
         rids = [eng.submit(list(p), max_new=max_new, seed=sd) for p, sd in zip(prompts, seeds)]
         outs = eng.run()
         return [outs[r]["tokens"] for r in rids]
 
-    # Warmup pass: compiles every shape bucket, profiles commits honestly
-    # (profile_commits blocks on each fused commit — doing that in the timed
-    # pass would serialize the very overlap the pipeline exists to create)
-    # and probes pool occupancy whenever the used-block peak advances.  The
-    # workload repeats deterministically, so the warmup's commit cost and
-    # peak occupancy are the timed pass's too.
     eng.profile_commits = True
     for p, sd in zip(prompts, seeds):
         eng.submit(list(p), max_new=max_new, seed=sd)
@@ -127,18 +159,25 @@ def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
     commit_stats = {k: eng.counters[k] for k in
                     ("commit_calls", "commit_ms", "blocks_peak", "blocks_reclaimed")}
     # the per-shard peaks tell the scheduler-balance story the aggregate hides
-    shard_peaks = [e.counters["blocks_peak"] for e in engines] if data_shards > 1 else None
-    # Timed pass: the steady-state serving loop, commits dispatched async.
+    commit_stats["shard_blocks_peak"] = (
+        [e.counters["blocks_peak"] for e in engines] if data_shards > 1 else None)
+    # From here the steady-state serving loop runs with commits dispatched
+    # async; zero the warmup's tallies so the timed pass reports its own.
     eng.profile_commits = False
-    for e in engines:
-        for key in ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak",
-                    "pipeline_ahead", "pipeline_stalls"):
-            e.counters[key] = 0
-    outs, dt = _median_timed(workload, reps)
+    eng.reset_counters(_WARM_KEYS)
+    return eng, workload, commit_stats, peak["occ"]
+
+
+def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
+                paged=True, block_size=64, pipeline=False, reps=1, data_shards=1):
+    eng, workload, commit_stats, occ = prepare_batched(
+        cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
+        paged=paged, block_size=block_size, pipeline=pipeline,
+        data_shards=data_shards)
+    outs, dt = _best_timed(workload, reps)
     counters = dict(eng.counters)
     counters.update(commit_stats)  # report the honest (blocked) commit numbers
-    counters["shard_blocks_peak"] = shard_peaks
-    return outs, dt, counters, peak["occ"]
+    return outs, dt, counters, occ
 
 
 def run_coresidency(cfg, tp, dcfg, dp, ecfg, sampling, seed, block_size=16):
@@ -204,10 +243,11 @@ def main(argv=None):
                          "(--no-pipeline skips that column)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the BENCH_batch_throughput.json document here")
-    ap.add_argument("--reps", type=int, default=3,
+    ap.add_argument("--reps", type=int, default=5,
                     help="timed repetitions per mode; the reported wall is "
-                         "the median (smoke configs are sub-second, where "
-                         "single-shot timings are scheduler noise)")
+                         "the per-mode minimum (smoke configs are sub-second, "
+                         "where single-shot timings are scheduler noise and "
+                         "interruptions only ever add time)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch)
@@ -239,20 +279,33 @@ def main(argv=None):
         seeds = [args.seed + 100 + i for i in range(n)]
         outs_s, dt_s = run_sequential(cfg, tp, dcfg, dp, ecfg, sampling,
                                       prompts, args.max_new, seeds, reps=args.reps)
-        outs_b, dt_b, counters, occ = run_batched(
+        # build + warm both stepping modes first, then time them with reps
+        # interleaved — the batched-vs-pipelined comparison is the headline
+        # number, so it must not absorb machine drift as a mode difference
+        eng_b, wl_b, counters, occ = prepare_batched(
             cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
-            paged=not args.ring, block_size=args.block_size, reps=args.reps,
+            paged=not args.ring, block_size=args.block_size,
             data_shards=args.data_shards)
+        workloads = {"batched": wl_b}
+        eng_p = None
+        if args.pipeline:
+            eng_p, wl_p, pcommit, _ = prepare_batched(
+                cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
+                paged=not args.ring, block_size=args.block_size, pipeline=True,
+                data_shards=args.data_shards)
+            workloads["pipelined"] = wl_p
+        timed = _interleaved_timed(workloads, args.reps)
+        outs_b, dt_b = timed["batched"]
+        counters.update({k: eng_b.counters[k] for k in _OVERLAP_KEYS})
         # actual emitted tokens (an evicted request returns fewer than
         # max_new); the exactness checks below pin all modes to this count
         tok = sum(len(o) for o in outs_s)
         exact = all(a == b for a, b in zip(outs_s, outs_b))
         dt_p, pipe_exact, pcounters = None, True, {}
         if args.pipeline:
-            outs_p, dt_p, pcounters, _ = run_batched(
-                cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
-                paged=not args.ring, block_size=args.block_size, pipeline=True,
-                reps=args.reps, data_shards=args.data_shards)
+            outs_p, dt_p = timed["pipelined"]
+            pcounters = dict(eng_p.counters)
+            pcounters.update(pcommit)
             pipe_exact = all(a == b for a, b in zip(outs_s, outs_p))
         rows.append((n, tok / dt_s, tok / dt_b,
                      tok / dt_p if dt_p else None, exact and pipe_exact))
@@ -276,7 +329,8 @@ def main(argv=None):
                  f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)")
         if pcounters:
             line += (f"   overlap: {pcounters['pipeline_ahead']} ahead, "
-                     f"{pcounters['pipeline_stalls']} stalls")
+                     f"{pcounters['pipeline_stalls']} stalls / "
+                     f"{pcounters['pipeline_iterations']} iters")
         print(line + pool_note)
         json_rows.append({
             "batch": n,
@@ -297,6 +351,7 @@ def main(argv=None):
             "shard_blocks_peak": counters.get("shard_blocks_peak"),
             "pipeline_ahead": pcounters.get("pipeline_ahead"),
             "pipeline_stalls": pcounters.get("pipeline_stalls"),
+            "pipeline_iterations": pcounters.get("pipeline_iterations"),
         })
     if len(rows) > 1:
         first, last = rows[0], rows[-1]

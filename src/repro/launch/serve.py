@@ -145,14 +145,19 @@ def main(argv=None):
             f"peak={c['blocks_peak']} used, reclaimed={c['blocks_reclaimed']})"
         )
         stepping = (
-            f"pipelined(ahead={c['pipeline_ahead']}, stalls={c['pipeline_stalls']})"
+            f"pipelined(ahead={c['pipeline_ahead']}, stalls={c['pipeline_stalls']}"
+            f"/{c['pipeline_iterations']} iters)"
             if args.pipeline else "sync"
         )
         if args.data_shards > 1:
             per = [sh.counters["blocks_peak"] for sh in eng.shards]
+            # grouped commits are engine-level dispatches (no single shard
+            # owns them); surfacing them shows the cross-shard batching
+            grouped = eng._counters["commit_calls"]
             stepping += (f" shards={args.data_shards}"
                          f"(x{eng.n_slots // args.data_shards} slots, "
-                         f"peaks={per})")
+                         f"peaks={per}, commits={c['commit_calls']} "
+                         f"of which {grouped} grouped)")
         print(
             f"\n[batched x{args.streams}] verifier={args.verifier} "
             f"({args.K},{args.L1},{args.L2}) block_efficiency={be:.3f} "

@@ -66,23 +66,29 @@ least-loaded scheduler.  No cross-shard state exists beyond the routing
 decision, which is the property that scales the pool past one chip's HBM.
 
 Pipelined stepping (``pipeline=True``, docs/serving.md "Pipelined stepping"):
-``step()`` is built from two halves — ``begin_step()`` runs the scheduling
+``step()`` is built from phases — ``begin_step()`` runs the scheduling
 boundary (admission, capacity eviction, paged block mapping) and dispatches
 the draft + tree-pass device work, returning a ``PendingStep`` whose tree
-outputs are still device futures; ``finish_step()`` verifies on host, issues
-the fused commit, and retires the step.  In pipelined mode ``finish_step``
-dispatches the NEXT step's draft/tree work right after verification, before
-its own retirement bookkeeping, so step i's host tail overlaps step i+1's
-device work.  A stall-and-drain rule keeps scheduling — and therefore
-tokens — identical to the synchronous engine: the pipeline never runs ahead
-across an iteration that retires a stream (slot/block releases must land
-before the next admission/pressure decision), and a begun step can be
-drained (``drain_pipeline``) or rewound (``abort_step``) against the draft
-pool's double-buffered back frame (models/cache.py ``begin_frame``).
+outputs are still device futures; ``verify_step()`` blocks on those futures
+and verifies per stream on host, ``commit_step()`` issues the fused commit,
+and ``retire_step()`` advances token bookkeeping and dispatches the NEXT
+step's draft/tree work before the host tail (the hidden-state readback and
+stream retirement), so step i's tail overlaps step i+1's device work.
+``finish_step()`` is the composition of the last three.  Scheduling — and
+therefore tokens — stays identical to the synchronous engine because every
+retiring stream's slot/block release lands BEFORE the begun-ahead boundary
+(the boundary sees exactly the post-release pool a synchronous
+``begin_step`` would), and a begun step can be drained (``drain_pipeline``)
+or rewound (``abort_step``, ``abort_pipeline``) when out-of-band events —
+a mid-run ``submit`` against a free row — would have changed it.  The rewind is LOGICAL for attention-family draft pools —
+ingest writes are append-only and deterministic, so ``invalidate_from``
+erases them and the re-begun step re-ingests identical lanes — and only
+recurrent draft pools hold the double-buffered back frame (models/cache.py
+``begin_frame``): keeping the pre-step arena alive was the pipelined mode's
+single biggest overhead.
 """
 from __future__ import annotations
 
-import copy
 import time
 from collections import defaultdict
 from dataclasses import dataclass
@@ -116,6 +122,7 @@ from repro.serving.engine import (
 )
 from repro.serving.serve_step import (
     StagingBuffers,
+    make_group_commit_step,
     make_pool_commit_step,
     make_pool_decode_step,
     make_pool_locked_step,
@@ -145,7 +152,9 @@ class PendingStep:
     against.  The replay strategy's target pass is host-interleaved, so it
     arrives already materialised as ``snapshot``/``p_host``.
 
-    ``C0`` (committed length minus the pending root, per slot) and
+    ``C0`` (committed length minus the pending root, per slot), ``D0``
+    (the draft pool's pre-ingest length, per slot — attention-family draft
+    pools rewind logically instead of holding a back frame) and
     ``rng_state`` (per-stream generator snapshots, pipelined mode only)
     are the rewind coordinates ``abort_step`` uses."""
 
@@ -160,11 +169,30 @@ class PendingStep:
     snapshot: dict | None = None
     p_host: dict | None = None
     rng_state: dict | None = None
+    D0: dict[int, int] | None = None
     # True when this step's scheduling boundary evicted a stream: its slot
     # and block releases stand, so replaying admission against the
     # post-eviction pool would not reproduce the synchronous
     # admit-before-evict order (submit()'s drain-vs-abort rule)
     boundary_evicted: bool = False
+
+
+@dataclass
+class VerifiedStep:
+    """A verified-but-unretired iteration: ``verify_step``'s per-stream
+    accept/correction decisions, ready for ``commit_step`` (which fills
+    ``hid_last`` on the replay strategy) and ``retire_step``.
+
+    The split exists so a driver holding several engines — the sharded
+    engine's concurrent ``step()`` — can verify every shard against the
+    others' in-flight device work, then batch the commits into one
+    dispatch before any shard retires."""
+
+    pending: PendingStep
+    accepted: dict[int, list]
+    corr: dict[int, int]
+    node_paths: dict | None = None   # tree strategy: accepted node index paths
+    hid_last: dict | None = None     # replay strategy: filled by commit_step
 
 
 class BatchedSpeculativeEngine:
@@ -245,11 +273,22 @@ class BatchedSpeculativeEngine:
         # (benchmarks set it): blocking on the commit every step would
         # serialize host bookkeeping against the device op it just saved.
         self.profile_commits = False
+        # pipeline_iterations counts every pipeline-ahead decision point, and
+        # each decision either runs ahead or stalls — so
+        # pipeline_ahead + pipeline_stalls == pipeline_iterations holds by
+        # construction (the race-harness invariant, tests/test_race.py)
         self.counters = {"target_calls": 0, "target_tokens": 0, "draft_calls": 0,
                          "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0,
                          "commit_calls": 0, "commit_ms": 0.0,
                          "blocks_reclaimed": 0, "admit_blocked": 0, "blocks_peak": 0,
-                         "pipeline_ahead": 0, "pipeline_stalls": 0}
+                         "pipeline_ahead": 0, "pipeline_stalls": 0,
+                         "pipeline_iterations": 0}
+
+    def reset_counters(self, keys) -> None:
+        """Zero the named counters (shared surface with the sharded engine —
+        benchmarks reset per-pass counters through one call either way)."""
+        for key in keys:
+            self.counters[key] = type(self.counters[key])()
 
     # ------------------------------------------------------------- helpers ---
 
@@ -742,11 +781,11 @@ class BatchedSpeculativeEngine:
                 start_copy()
         return p_dev, hidden
 
-    def _commit_tree_batch(self, active, node_paths, Tpad):
-        """Fused commit: ONE jitted, pool-donating call re-compacts every
-        active row's accepted path (serve_step.make_pool_commit_step) —
-        the tentpole replacing the per-stream eager ``.at[].set`` chains
-        (kept as serve_step.commit_row_reference, the test/bench oracle)."""
+    def _commit_tables(self, active, node_paths):
+        """Stage the fused commit's index tables (accepted node paths, path
+        lengths, pre-block committed lengths, active mask) and return them
+        with the padded path width P.  Shared between the single-engine
+        commit and the sharded engine's grouped cross-shard commit."""
         B = self.n_slots
         P = _next_pow2(max([len(node_paths[s]) for s in active] + [1]))
         npath = self._stage("commit_path", (B, P), np.int32)
@@ -759,6 +798,14 @@ class BatchedSpeculativeEngine:
             plen[s] = len(path)
             Cb[s] = len(self.streams[s]["committed"]) - 1
             act[s] = True
+        return npath, plen, Cb, act, P
+
+    def _commit_tree_batch(self, active, node_paths, Tpad):
+        """Fused commit: ONE jitted, pool-donating call re-compacts every
+        active row's accepted path (serve_step.make_pool_commit_step) —
+        the tentpole replacing the per-stream eager ``.at[].set`` chains
+        (kept as serve_step.commit_row_reference, the test/bench oracle)."""
+        npath, plen, Cb, act, P = self._commit_tables(active, node_paths)
         fn = self._jit(f"commit_T{Tpad}_P{P}",
                        make_pool_commit_step(self.tc, Tpad), donate_argnums=0)
         t0 = time.perf_counter()
@@ -930,99 +977,168 @@ class BatchedSpeculativeEngine:
                     return None
                 pads = self._bucket_actions(acts)
                 Kp, L1p, L2p, Tpad = pads
-        # rewind coordinates + the draft pool's back frame (pipelined mode):
-        # abort_step can restore rng/draft state as if the step never began
+        # rewind coordinates (pipelined mode): abort_step can restore
+        # rng/draft state as if the step never began
         C0 = {s: len(self.streams[s]["committed"]) - 1 for s in active}
-        rng_state = None
+        rng_state, D0 = None, None
         if self.pipeline:
-            rng_state = {s: copy.deepcopy(self.streams[s]["rng"].bit_generator.state)
+            # numpy's .state property builds a fresh dict per access, so the
+            # snapshot needs no deepcopy
+            rng_state = {s: self.streams[s]["rng"].bit_generator.state
                          for s in active}
-            self.dpool.begin_frame()
+            if self._recurrent(self.dc):
+                # recurrent draft state integrates every token — it can only
+                # be rewound from a saved copy, so hold the back frame
+                self.dpool.begin_frame()
+            else:
+                # attention draft rewind is LOGICAL: this step's only pool
+                # mutation is the append-only, deterministic delta ingest
+                # (trunk drafting runs on a discarded local copy), so
+                # abort_step erases pos >= D0 lanes and the re-begun step
+                # re-ingests bit-identical values.  No back frame held:
+                # keeping the pre-step arena alive serialized the allocator
+                # and cost more than the pipeline overlap earned.
+                D0 = {s: len(self.streams[s]["committed"])
+                         - len(self.streams[s]["draft_delta"])
+                      for s in active}
         q0, hq = self._ingest_deltas(active)
         trees = self._draft_trees(active, acts, q0, pads)
         if self.strategy == "tree":
             p_dev, hid_dev = self._target_tree_dispatch(active, trees, Tpad)
             return PendingStep(active=active, acts=acts, pads=pads, trees=trees,
                                hq=hq, C0=C0, p_dev=p_dev, hid_dev=hid_dev,
-                               rng_state=rng_state, boundary_evicted=boundary_evicted)
+                               rng_state=rng_state, D0=D0,
+                               boundary_evicted=boundary_evicted)
         snapshot, p_host = self._target_replay(active, trees, acts, Kp)
         return PendingStep(active=active, acts=acts, pads=pads, trees=trees,
                            hq=hq, C0=C0, snapshot=snapshot, p_host=p_host,
-                           rng_state=rng_state, boundary_evicted=boundary_evicted)
+                           rng_state=rng_state, D0=D0,
+                           boundary_evicted=boundary_evicted)
 
-    def finish_step(self, pending: PendingStep, pipeline_ahead: bool | None = None) -> list[dict]:
-        """The RETIRE half of a step: block on the tree-pass futures, verify
-        every stream on host, issue the ONE fused commit, and retire the
-        iteration (token bookkeeping, events, finishing done streams).
-
-        In pipelined mode (``pipeline_ahead`` defaults to ``self.pipeline``)
-        the next step is begun right after this one's verification+commit —
-        BEFORE the retirement bookkeeping — so the host tail runs while the
-        device already chews on step i+1.  Stall rule: an iteration that
-        retires a stream (reaches ``max_new``) must fully retire before the
-        next ``begin_step``, because releasing its pool row/blocks feeds the
-        next admission and pressure decisions; skipping ahead there would
-        change scheduling relative to the synchronous engine."""
+    def verify_step(self, pending: PendingStep) -> VerifiedStep:
+        """The VERIFY phase: block on the tree-pass logits future and run
+        every stream's host-side accept/reject walk.  Consumes per-stream
+        rng, so it fixes this step's tokens — but touches no pool state and
+        no scheduling state, which is what lets the sharded driver verify
+        one shard while the other shards' dispatched device work is still
+        in flight, then batch all commits into one call."""
         if self.dpool.frame_held:
             self.dpool.drop_frame()  # committing to this step: no rewind past here
-        active, trees, Tpad = pending.active, pending.trees, pending.pads[3]
-        accepted_by_slot, corr_by_slot = {}, {}
-        retire: list[tuple[int, dict]] = []
+        active, trees = pending.active, pending.trees
+        accepted, corr = {}, {}
         if self.strategy == "tree":
             p_all = np.asarray(pending.p_dev)
-            hid_all = np.asarray(pending.hid_dev)
             node_paths = {}
             for s in active:
                 tree = trees[s]
-                n = tree.n_nodes
-                tree.p = to_verifier_dtype(p_all[s, :n])
-                accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
-                accepted_by_slot[s] = accepted
-                corr_by_slot[s] = int(corr)
-                node_paths[s] = SpeculativeEngine._accepted_nodes(tree, accepted)
-            # every row's ring compaction in one jitted, donated pass
-            self._commit_tree_batch(active, node_paths, Tpad)
-            for s in active:
-                node_path = node_paths[s]
-                last_node = node_path[-1] if node_path else 0
-                self.streams[s]["h_prev_p"] = hid_all[s, last_node]
-                retire.append(
-                    (s, self._advance_stream(s, trees[s], accepted_by_slot[s],
-                                             corr_by_slot[s], pending.hq[s], node_path))
-                )
+                tree.p = to_verifier_dtype(p_all[s, : tree.n_nodes])
+                acc, c = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
+                accepted[s], corr[s] = acc, int(c)
+                node_paths[s] = SpeculativeEngine._accepted_nodes(tree, acc)
+            return VerifiedStep(pending, accepted, corr, node_paths=node_paths)
+        for s in active:
+            tree = trees[s]
+            tree.p = to_verifier_dtype(pending.p_host[s])
+            acc, c = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
+            accepted[s], corr[s] = acc, int(c)
+        return VerifiedStep(pending, accepted, corr)
+
+    def commit_step(self, v: VerifiedStep) -> None:
+        """The COMMIT phase: ONE fused, pool-donating call compacts every
+        row's accepted path (tree strategy), or the grouped replay
+        re-advance (replay strategy, which also yields the last hidden
+        states).  Must run before ``retire_step`` extends ``committed`` —
+        the commit indices are relative to the pre-block length."""
+        pending = v.pending
+        if self.strategy == "tree":
+            self._commit_tree_batch(pending.active, v.node_paths, pending.pads[3])
         else:
-            for s in active:
-                tree = trees[s]
-                tree.p = to_verifier_dtype(pending.p_host[s])
-                accepted, corr = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
-                accepted_by_slot[s] = accepted
-                corr_by_slot[s] = int(corr)
-            hid_last = self._commit_replay(active, pending.snapshot, accepted_by_slot)
-            for s in active:
-                self.streams[s]["h_prev_p"] = hid_last[s]
-                retire.append(
-                    (s, self._advance_stream(s, trees[s], accepted_by_slot[s],
-                                             corr_by_slot[s], pending.hq[s]))
-                )
+            v.hid_last = self._commit_replay(pending.active, pending.snapshot,
+                                             v.accepted)
+
+    def _read_hidden(self, v: VerifiedStep) -> None:
+        """Publish each stream's last accepted hidden state (``h_prev_p``).
+        On the tree strategy this blocks on the hidden-state device future,
+        so ``retire_step`` defers it behind the pipeline-ahead dispatch
+        whenever nothing reads it at the next boundary — after which a
+        stream may already be gone (the begun-ahead boundary can evict), so
+        departed rows are skipped."""
+        pending = v.pending
+        if self.strategy == "tree":
+            hid_all = np.asarray(pending.hid_dev)
+            for s in pending.active:
+                if s not in self.streams:
+                    continue
+                path = v.node_paths[s]
+                self.streams[s]["h_prev_p"] = hid_all[s, path[-1] if path else 0]
+        else:
+            for s in pending.active:
+                if s in self.streams:
+                    self.streams[s]["h_prev_p"] = v.hid_last[s]
+
+    def retire_step(self, v: VerifiedStep, pipeline_ahead: bool | None = None) -> list[dict]:
+        """The RETIRE phase: token bookkeeping, the pipeline-ahead decision,
+        then the host tail (hidden-state readback, releasing finished
+        streams' rows/blocks).
+
+        In pipelined mode (``pipeline_ahead`` defaults to ``self.pipeline``)
+        the critical bookkeeping runs first — the stream fields the next
+        boundary reads (``committed``, ``pending``, ``draft_delta``,
+        ``done``) and the release of retiring streams' rows/blocks — then
+        the next step is begun, then the host tail (the blocking
+        hidden-state readback, deferred only when no selector consumes it
+        at the next boundary) runs while the device already chews on step
+        i+1.  Releasing BEFORE the begun-ahead boundary is what lets the
+        pipeline run ahead across retiring iterations: the boundary sees
+        exactly the post-release pool the synchronous engine's next
+        ``begin_step`` would see, so admission and pressure decisions — and
+        therefore tokens — stay identical.  The pipeline stalls only when
+        the boundary itself comes up empty (nothing left to dispatch)."""
+        pending = v.pending
+        retire: list[tuple[int, dict]] = []
+        for s in pending.active:
+            node_path = None if v.node_paths is None else v.node_paths[s]
+            retire.append(
+                (s, self._advance_stream(s, pending.trees[s], v.accepted[s],
+                                         v.corr[s], pending.hq[s], node_path))
+            )
         if pipeline_ahead is None:
             pipeline_ahead = self.pipeline
-        if pipeline_ahead:
-            assert self._pending_next is None, "a begun-ahead step is already pending"
-            if any(ev["done"] for _, ev in retire):
-                # stall-and-drain: this iteration frees a row (and its
-                # blocks) — the release must land before the next boundary
-                self.counters["pipeline_stalls"] += 1
-            else:
-                self._pending_next = self.begin_step()
-                if self._pending_next is not None:
-                    self.counters["pipeline_ahead"] += 1
-        # retirement tail: release finished streams' rows/blocks.  In the
-        # pipeline-ahead case nothing here is scheduling-visible (no stream
-        # finished), so running it behind step i+1's device work is safe.
+        # defer the blocking hidden readback past the next dispatch only
+        # when nothing at the next boundary consumes it (selectors read
+        # h_prev_p); the replay strategy's hid_last is already host-side
+        defer_hid = (pipeline_ahead and self.strategy == "tree"
+                     and self.selector is None)
+        if not defer_hid:
+            self._read_hidden(v)
+        # release finished streams' rows/blocks BEFORE the next boundary —
+        # the freed capacity is scheduling-visible there (admission and
+        # block pressure), exactly as after a synchronous step
         for s, ev in retire:
             if ev["done"]:
                 self._finish(s)
+        if pipeline_ahead:
+            assert self._pending_next is None, "a begun-ahead step is already pending"
+            self.counters["pipeline_iterations"] += 1
+            self._pending_next = self.begin_step()
+            if self._pending_next is not None:
+                self.counters["pipeline_ahead"] += 1
+            else:
+                # an empty boundary (no live streams, nothing admissible)
+                # is the only stall left: ahead + stalls == iterations
+                self.counters["pipeline_stalls"] += 1
+        # host tail: runs behind step i+1's dispatched device work
+        if defer_hid:
+            self._read_hidden(v)
         return [ev for _, ev in retire]
+
+    def finish_step(self, pending: PendingStep, pipeline_ahead: bool | None = None) -> list[dict]:
+        """Verify + commit + retire a dispatched step — the single-engine
+        composition of the three phases (the sharded engine drives them
+        separately to interleave its shards)."""
+        v = self.verify_step(pending)
+        self.commit_step(v)
+        return self.retire_step(v, pipeline_ahead)
 
     def step(self) -> list[dict]:
         """Admit queued requests, advance every active stream one speculative
@@ -1050,27 +1166,45 @@ class BatchedSpeculativeEngine:
 
     def abort_step(self, pending: PendingStep) -> None:
         """Rewind a begun step as if it never dispatched (pipelined mode):
-        restore every active stream's rng snapshot, roll the draft pool back
-        to its double-buffered frame, and invalidate the target rows'
-        speculative tree writes (their pool buffer was donated, so the
-        pre-pass buffer is gone — but every speculative lane carries
-        pos >= C0 and is erased by ``CachePool.invalidate_from``; the replay
-        strategy never touches the target pool before its commit).  Boundary
-        decisions taken by ``begin_step`` (admissions, evictions, block
-        mappings) are scheduling events that stand; dead mappings are
-        recycled by the normal pressure path.  Work counters also stand —
-        they count dispatched work."""
+        restore every active stream's rng snapshot, rewind the draft pool —
+        logically for attention-family drafts (the step's only draft-pool
+        mutation is the append-only delta ingest: erase pos >= D0 lanes
+        with ``invalidate_from`` and the re-begun step re-ingests identical
+        values), from the double-buffered back frame for recurrent drafts —
+        and invalidate the target rows' speculative tree writes (their pool
+        buffer was donated, so the pre-pass buffer is gone — but every
+        speculative lane carries pos >= C0 and is erased by
+        ``CachePool.invalidate_from``; the replay strategy never touches the
+        target pool before its commit).  Boundary decisions taken by
+        ``begin_step`` (admissions, evictions, block mappings) are
+        scheduling events that stand; dead mappings are recycled by the
+        normal pressure path.  Work counters also stand — they count
+        dispatched work."""
         assert pending.rng_state is not None, \
             "abort_step needs the rng snapshots only pipelined begin_step records"
         if pending is self._pending_next:
             self._pending_next = None
         for s, state in pending.rng_state.items():
             if s in self.streams:
-                self.streams[s]["rng"].bit_generator.state = copy.deepcopy(state)
-        self.dpool.rollback_frame()
+                self.streams[s]["rng"].bit_generator.state = state
+        if self.dpool.frame_held:
+            self.dpool.rollback_frame()
+        elif pending.D0 is not None:
+            self.dpool.invalidate_from({s: pending.D0[s] for s in pending.active
+                                        if s in self.streams})
         if self.strategy == "tree":
             self.tpool.invalidate_from({s: pending.C0[s] for s in pending.active
                                         if s in self.streams})
+
+    def abort_pipeline(self) -> int:
+        """Rewind the begun-ahead step, if any (``abort_step`` on
+        ``_pending_next``).  Returns the number of steps rewound (0 or 1) —
+        the sharded engine sums it across shards."""
+        pending, self._pending_next = self._pending_next, None
+        if pending is None:
+            return 0
+        self.abort_step(pending)
+        return 1
 
     def _advance_stream(self, slot, tree, accepted, corr, h_q, node_path=None):
         """Token bookkeeping shared with SpeculativeEngine.step.  Marks the
@@ -1236,6 +1370,17 @@ class ShardedBatchedSpeculativeEngine:
         self._next_rid = 0
         self._local: dict[int, tuple[int, int]] = {}   # global rid -> (shard, local rid)
         self._global: dict[tuple[int, int], int] = {}  # (shard, local rid) -> global rid
+        # grouped cross-shard commit (see _commit_shards): legal only when
+        # every shard's pool lives on the same device set, which is exactly
+        # the host-local smoke topology shard_meshes produces by cycling a
+        # short device list
+        devs = [tuple(sh.mesh.devices.flat) for sh in self.shards]
+        self._colocated = all(d == devs[0] for d in devs)
+        self._jit_cache: dict = {}
+        # engine-level commit counters: a grouped commit is ONE dispatch
+        # that belongs to no single shard (the counters property merges
+        # these into the summed per-shard view)
+        self._counters = {"commit_calls": 0, "commit_ms": 0.0}
 
     # --------------------------------------------------------- scheduling ---
 
@@ -1280,13 +1425,101 @@ class ShardedBatchedSpeculativeEngine:
 
     # --------------------------------------------------------------- steps ---
 
+    def _jit(self, name, fn, donate_argnums=None):
+        """Engine-level jit cache for the grouped cross-shard commit (the
+        shards keep their own caches for everything shard-local)."""
+        if name not in self._jit_cache:
+            kw = {} if donate_argnums is None else {"donate_argnums": donate_argnums}
+            self._jit_cache[name] = jax.jit(fn, **kw)
+        return self._jit_cache[name]
+
+    def _finish_order(self, sis: list[int]) -> list[int]:
+        """The order shards' in-flight steps are VERIFIED in.  Shards are
+        independent and verification touches only shard-local state, so any
+        permutation yields identical tokens — the default is shard order;
+        the race harness (tests/test_race.py) overrides this to shuffle
+        host-side completion order under a seed."""
+        return list(sis)
+
     def step(self) -> list[dict]:
-        """Advance every shard one speculative block (shard order is fixed;
-        shards are independent, so order affects wall-clock only)."""
+        """Advance every shard one speculative block, CONCURRENTLY across
+        shards: every shard's ``begin_step`` dispatches before any shard's
+        verification blocks, so one shard's host-side verify loop hides
+        behind the other shards' in-flight device work (on a multi-device
+        host the shard passes themselves also overlap).  Then all verified
+        shards commit in ONE grouped dispatch (``_commit_shards``) and
+        retire in shard order — the retire phase runs each shard's
+        pipeline-ahead dispatch when pipelining, so the next iteration's
+        device work is already in flight when this call returns."""
         events = []
+        # phase 1 — begin: surface drained events, then dispatch every
+        # shard's step (consuming a begun-ahead step where one is pending)
+        # before any verification blocks on a device future
+        pendings: list = []
         for si, sh in enumerate(self.shards):
-            events.extend(self._collect(si, sh.step()))
+            drained, sh._drained_events = sh._drained_events, []
+            events.extend(self._collect(si, drained))
+            pending, sh._pending_next = sh._pending_next, None
+            if pending is None:
+                pending = sh.begin_step()
+            pendings.append(pending)
+        live = [si for si, p in enumerate(pendings) if p is not None]
+        # phase 2 — verify: per-stream host walks, one shard at a time,
+        # while the remaining shards' dispatched passes keep the device busy
+        verified = {si: self.shards[si].verify_step(pendings[si])
+                    for si in self._finish_order(live)}
+        # phase 3 — commit: one grouped dispatch across shards
+        self._commit_shards(verified)
+        # phase 4 — retire (shard order, so event order is deterministic
+        # regardless of the verify permutation)
+        for si in sorted(verified):
+            events.extend(self._collect(
+                si, self.shards[si].retire_step(verified[si])))
+        # a shard whose boundary came up empty can still have retired a
+        # stream there (capacity eviction) — surface its finished payloads
+        for si in range(self.data_shards):
+            if si not in verified:
+                events.extend(self._collect(si, []))
         return events
+
+    def _commit_shards(self, verified: dict[int, VerifiedStep]) -> None:
+        """Commit every verified shard's accepted paths.  Tree-strategy
+        shards that share a device batch their staged index tables into ONE
+        jitted, pool-donating dispatch (serve_step.make_group_commit_step)
+        — restoring single-shard ``commit_calls``/``commit_ms`` — and fall
+        back to per-shard commits when alone, un-colocated, or on the
+        replay strategy (whose commit is a host-interleaved re-advance)."""
+        group = sorted(verified) if self.strategy == "tree" and self._colocated \
+            else []
+        if len(group) <= 1:
+            for si in sorted(verified):
+                self.shards[si].commit_step(verified[si])
+            return
+        sigs, tables, caches = [], [], []
+        for si in group:
+            sh, v = self.shards[si], verified[si]
+            npath, plen, Cb, act, P = sh._commit_tables(v.pending.active,
+                                                        v.node_paths)
+            sigs.append((v.pending.pads[3], P))
+            tables.append((npath, plen, Cb, act))
+            caches.append(sh.tpool.cache)
+        key = "gcommit_" + "_".join(f"s{si}T{t}P{p}"
+                                    for si, (t, p) in zip(group, sigs))
+        fn = self._jit(key, make_group_commit_step(self.shards[0].tc,
+                                                   [t for t, _ in sigs]),
+                       donate_argnums=0)
+        t0 = time.perf_counter()
+        out = fn(tuple(caches),
+                 tuple(jnp.asarray(t[0]) for t in tables),
+                 tuple(jnp.asarray(t[1]) for t in tables),
+                 tuple(jnp.asarray(t[2]) for t in tables),
+                 tuple(jnp.asarray(t[3]) for t in tables))
+        for si, cache in zip(group, out):
+            self.shards[si].tpool.cache = cache
+        if self.profile_commits:
+            jax.block_until_ready(out)
+        self._counters["commit_calls"] += 1
+        self._counters["commit_ms"] += (time.perf_counter() - t0) * 1e3
 
     def drain_pipeline(self) -> list[dict]:
         """Drain every shard's begun-ahead step (see
@@ -1295,6 +1528,14 @@ class ShardedBatchedSpeculativeEngine:
         for si, sh in enumerate(self.shards):
             events.extend(self._collect(si, sh.drain_pipeline()))
         return events
+
+    def abort_pipeline(self) -> int:
+        """Rewind EVERY shard's begun-ahead step (each shard restores its
+        own rng snapshots and pool state — ``abort_step``).  Returns how
+        many shards rewound a step; with several shards begun ahead all of
+        them must land, or the next boundary would replay some shards'
+        randomness against others' already-consumed state."""
+        return sum(sh.abort_pipeline() for sh in self.shards)
 
     def run(self) -> dict[int, dict]:
         """Drain all shards; returns ``{rid: {"tokens", "reason"}}`` for the
@@ -1330,18 +1571,25 @@ class ShardedBatchedSpeculativeEngine:
 
     @property
     def counters(self) -> dict:
-        """Work/overlap counters summed across shards (read-only view; use
-        ``reset_counters`` or the per-shard dicts to mutate)."""
+        """Work/overlap counters summed across shards, plus the engine-level
+        grouped-commit counters (a grouped commit is one dispatch belonging
+        to no single shard).  Read-only view; use ``reset_counters`` or the
+        per-shard dicts to mutate."""
         out: dict = {}
         for sh in self.shards:
             for key, val in sh.counters.items():
                 out[key] = out.get(key, type(val)()) + val
+        for key, val in self._counters.items():
+            out[key] = out.get(key, type(val)()) + val
         return out
 
     def reset_counters(self, keys) -> None:
         for sh in self.shards:
             for key in keys:
                 sh.counters[key] = type(sh.counters[key])()
+        for key in keys:
+            if key in self._counters:
+                self._counters[key] = type(self._counters[key])()
 
     @property
     def profile_commits(self) -> bool:

@@ -294,6 +294,39 @@ def make_pool_commit_step(cfg, Tpad: int):
     return commit
 
 
+def make_group_commit_step(cfg, tpads: list[int]):
+    """Grouped cross-shard commit: fuse N shard pools' post-verification
+    commits into ONE jitted dispatch.
+
+    The sharded engine's shards each own a private pool, so stepping them
+    as a host loop pays one commit dispatch (and, with ``profile_commits``,
+    one blocking sync) per shard per iteration — the 9 -> 17 ``commit_calls``
+    regression the baselines recorded.  Shard pools are disjoint arrays, so
+    their commits compose into a single program with no interference: this
+    builds one ``make_pool_commit_step`` per shard (each with its own
+    ``Tpad`` — shards bucket their speculation shapes independently) and
+    applies them elementwise over tuples.
+
+    Returned fn: (caches, node_paths, path_lens, Cs, actives) -> caches,
+    every argument a length-N tuple in shard order, with per-shard index
+    contracts exactly as in ``make_pool_commit_step``.  Jit with
+    ``donate_argnums=0`` (the engine does) and XLA updates every shard's
+    pool buffers in place in the one fused program.  Only valid when the
+    shard pools are device-colocated (the engine checks); on multi-host
+    topologies shards keep their per-shard commit calls."""
+    fns = [make_pool_commit_step(cfg, T) for T in tpads]
+
+    def group_commit(caches, node_paths, path_lens, Cs, actives):
+        assert len(caches) == len(fns), (len(caches), len(fns))
+        return tuple(
+            fn(cache, npath, plen, C, act)
+            for fn, cache, npath, plen, C, act
+            in zip(fns, caches, node_paths, path_lens, Cs, actives)
+        )
+
+    return group_commit
+
+
 def commit_row_reference(cache, slot: int, C: int, node_path, T: int):
     """PR-1 per-row sequential commit (eager ``.at[].set`` chains): the
     bit-exactness oracle the fused commit is property-tested and benchmarked

@@ -307,6 +307,31 @@ def test_admission_routes_around_exhausted_shard(dense_models):
     assert s0.counters["admit_blocked"] == 0
 
 
+def test_multi_shard_abort_rewinds_all(dense_models):
+    """``abort_pipeline`` with SEVERAL shards begun-ahead must rewind every
+    one of them: each shard restores its own rng snapshots and pool writes,
+    so the continued run still emits the synchronous sharded token stream.
+    (A partial rewind would replay one shard's randomness against another's
+    already-consumed state — the regression this pins down.)"""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    base = ShardedBatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                           data_shards=2)
+    want = base.generate_batch(PROMPTS, max_new=12, seeds=SEEDS)
+    eng = ShardedBatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                          data_shards=2, pipeline=True)
+    rids = [eng.submit(list(p), max_new=12, seed=sd)
+            for p, sd in zip(PROMPTS, SEEDS)]
+    eng.step()  # steady state: BOTH shards leave a step begun-ahead
+    assert sum(sh._pending_next is not None for sh in eng.shards) == 2
+    assert eng.abort_pipeline() == 2
+    assert all(sh._pending_next is None for sh in eng.shards)
+    assert not any(sh.dpool.frame_held for sh in eng.shards)
+    assert eng.abort_pipeline() == 0  # idempotent once quiescent
+    outs = eng.run()
+    assert [outs[r]["tokens"] for r in rids] == want
+
+
 def test_collective_bytes_parser():
     from repro.launch.dryrun import collective_bytes
 
