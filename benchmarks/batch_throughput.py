@@ -107,8 +107,11 @@ def run_sequential(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds, r
             outs.append(eng.generate(list(p), max_new=max_new))
         return outs
 
+    t0 = time.time()
     workload()  # warm every shape the workload compiles
-    return _best_timed(workload, reps)
+    warm = {"warmup_secs": time.time() - t0,
+            "compile_count": eng.jit_compile_count()}
+    return (*_best_timed(workload, reps), warm)
 
 
 _OVERLAP_KEYS = ("pipeline_ahead", "pipeline_stalls", "pipeline_iterations")
@@ -147,6 +150,7 @@ def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
         return [outs[r]["tokens"] for r in rids]
 
     eng.profile_commits = True
+    t0 = time.time()
     for p, sd in zip(prompts, seeds):
         eng.submit(list(p), max_new=max_new, seed=sd)
     peak = {"blocks": -1, "occ": {}}
@@ -156,6 +160,11 @@ def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
         if occ and occ["target"]["blocks_used"] >= peak["blocks"]:
             peak = {"blocks": occ["target"]["blocks_used"], "occ": occ}
     eng.finished.clear()
+    # cold-start compile budget: the warmup pass IS the compile phase (the
+    # timed pass recompiles nothing), so its wall and the jit-cache census
+    # after it are the numbers the bench_smoke compile-hygiene gate tracks
+    warm = {"warmup_secs": time.time() - t0,
+            "compile_count": eng.jit_compile_count()}
     commit_stats = {k: eng.counters[k] for k in
                     ("commit_calls", "commit_ms", "blocks_peak", "blocks_reclaimed")}
     # the per-shard peaks tell the scheduler-balance story the aggregate hides
@@ -165,12 +174,12 @@ def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
     # async; zero the warmup's tallies so the timed pass reports its own.
     eng.profile_commits = False
     eng.reset_counters(_WARM_KEYS)
-    return eng, workload, commit_stats, peak["occ"]
+    return eng, workload, commit_stats, peak["occ"], warm
 
 
 def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
                 paged=True, block_size=64, pipeline=False, reps=1, data_shards=1):
-    eng, workload, commit_stats, occ = prepare_batched(
+    eng, workload, commit_stats, occ, _ = prepare_batched(
         cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
         paged=paged, block_size=block_size, pipeline=pipeline,
         data_shards=data_shards)
@@ -277,19 +286,19 @@ def main(argv=None):
     for n in sizes:
         prompts = _prompts(n, cfg.vocab, args.seed)
         seeds = [args.seed + 100 + i for i in range(n)]
-        outs_s, dt_s = run_sequential(cfg, tp, dcfg, dp, ecfg, sampling,
-                                      prompts, args.max_new, seeds, reps=args.reps)
+        outs_s, dt_s, warm_s = run_sequential(cfg, tp, dcfg, dp, ecfg, sampling,
+                                              prompts, args.max_new, seeds, reps=args.reps)
         # build + warm both stepping modes first, then time them with reps
         # interleaved — the batched-vs-pipelined comparison is the headline
         # number, so it must not absorb machine drift as a mode difference
-        eng_b, wl_b, counters, occ = prepare_batched(
+        eng_b, wl_b, counters, occ, warm_b = prepare_batched(
             cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
             paged=not args.ring, block_size=args.block_size,
             data_shards=args.data_shards)
         workloads = {"batched": wl_b}
-        eng_p = None
+        eng_p, warm_p = None, {}
         if args.pipeline:
-            eng_p, wl_p, pcommit, _ = prepare_batched(
+            eng_p, wl_p, pcommit, _, warm_p = prepare_batched(
                 cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
                 paged=not args.ring, block_size=args.block_size, pipeline=True,
                 data_shards=args.data_shards)
@@ -331,6 +340,10 @@ def main(argv=None):
             line += (f"   overlap: {pcounters['pipeline_ahead']} ahead, "
                      f"{pcounters['pipeline_stalls']} stalls / "
                      f"{pcounters['pipeline_iterations']} iters")
+        line += (f"   compiles: {warm_s['compile_count']}s/"
+                 f"{warm_b['compile_count']}b"
+                 + (f"/{warm_p['compile_count']}p" if warm_p else "")
+                 + f" (warmup {warm_b['warmup_secs']:.1f}s)")
         print(line + pool_note)
         json_rows.append({
             "batch": n,
@@ -352,6 +365,16 @@ def main(argv=None):
             "pipeline_ahead": pcounters.get("pipeline_ahead"),
             "pipeline_stalls": pcounters.get("pipeline_stalls"),
             "pipeline_iterations": pcounters.get("pipeline_iterations"),
+            "compile_count": {
+                "sequential": warm_s["compile_count"],
+                "batched": warm_b["compile_count"],
+                "pipelined": warm_p.get("compile_count"),
+            },
+            "warmup_secs": {
+                "sequential": warm_s["warmup_secs"],
+                "batched": warm_b["warmup_secs"],
+                "pipelined": warm_p.get("warmup_secs"),
+            },
         })
     if len(rows) > 1:
         first, last = rows[0], rows[-1]

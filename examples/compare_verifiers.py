@@ -1,5 +1,8 @@
-"""Compare all eight verification algorithms on one model pair (Sec. 4 in
-miniature) — same drafts, same sampling, matched settings.
+"""Compare every registered verification algorithm on one model pair
+(Sec. 4 in miniature) — same drafts, same sampling, matched settings.
+The list is the core/verify.py registry itself, so newly registered
+verifiers show up here automatically (single-path ones at K = 1, on a
+matched 4-node budget).
 
     PYTHONPATH=src python examples/compare_verifiers.py --max-new 32
 """
@@ -7,6 +10,7 @@ import argparse
 
 import numpy as np
 
+from repro.core.verify import VERIFIERS as REGISTRY
 from repro.models.config import ModelConfig
 from repro.serving.engine import EngineConfig, SamplingParams, SpeculativeEngine
 from repro.training.data import SyntheticLM
@@ -14,14 +18,8 @@ from repro.training.loop import train
 
 V = 128
 VERIFIERS = [
-    ("naive_single", 1, 0, 4),
-    ("bv", 1, 0, 4),
-    ("nss", 2, 0, 2),
-    ("naivetree", 2, 0, 2),
-    ("spectr", 2, 0, 2),
-    ("specinfer", 2, 0, 2),
-    ("khisti", 2, 0, 2),
-    ("traversal", 2, 0, 2),
+    (name, *((1, 0, 4) if not spec.multipath else (2, 0, 2)))
+    for name, spec in sorted(REGISTRY.items())
 ]
 
 

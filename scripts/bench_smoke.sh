@@ -14,6 +14,17 @@
 #     per-mode minimum is reported, so machine drift and scheduler noise
 #     cannot masquerade as a stepping-mode difference),
 #   * the fused commit stops beating the sequential per-row commit,
+#   * the smoke workload's jit compile count grows past the committed
+#     baseline (benchmarks/baselines/BENCH_batch_throughput*.json
+#     ``compile_count``) for any engine mode — cold-start compile is the
+#     real cost of rolling out a config at fleet scale, so jit-cache
+#     growth is a tracked regression exactly like throughput.  Counts
+#     are deterministic for a fixed workload; shrink is allowed (update
+#     the baseline to lock it in),
+#   * any emitted BENCH_*.json drifts structurally from its committed
+#     baseline — schema version, config key set, or per-row result key
+#     set — without the baseline being regenerated.  Added or removed
+#     keys are listed; silent schema drift is how gates rot,
 #   * the --data-shards 2 host-local run loses exactness, its
 #     commit_calls exceed the single-shard run's by more than one
 #     dispatch per shard (the grouped cross-shard commit batches the
@@ -92,6 +103,53 @@ assert cb["bench"] == "commit_bench" and cb["schema"] == 1, "unknown bench schem
 worst = min(r["speedup_fused_vs_sequential"] for r in cb["results"])
 assert worst > 1.0, f"fused commit no longer beats the per-row chain ({worst:.2f}x)"
 
+# --- compile-hygiene gate: smoke compile counts vs the committed baseline ---
+compiles = []
+for fname, doc in (("BENCH_batch_throughput.json", bt),
+                   ("BENCH_batch_throughput_sharded.json", sh)):
+    with open(f"benchmarks/baselines/{fname}", encoding="utf-8") as f:
+        base_doc = json.load(f)
+    for row, base in zip(doc["results"], base_doc["results"]):
+        for mode, n in row["compile_count"].items():
+            b = base["compile_count"][mode]
+            if n is None or b is None:
+                assert n == b, \
+                    f"{fname} batch={row['batch']}: {mode} compile count " \
+                    f"appeared/disappeared vs baseline ({b} -> {n})"
+                continue
+            assert n <= b, \
+                f"{fname} batch={row['batch']}: {mode} jit compile count grew " \
+                f"{b} -> {n} — cold-start budget regression (if intended, " \
+                f"regenerate benchmarks/baselines/{fname})"
+            compiles.append(f"{mode}:{n}")
+
+# --- schema-drift gate: emitted documents vs their committed baselines -----
+import os
+
+def key_drift(kind, new, old):
+    added, removed = sorted(set(new) - set(old)), sorted(set(old) - set(new))
+    if added or removed:
+        return [f"{kind}: added {added or '-'}, removed {removed or '-'}"]
+    return []
+
+for fname in sorted(os.listdir(out)):
+    base_path = f"benchmarks/baselines/{fname}"
+    if not (fname.startswith("BENCH_") and os.path.exists(base_path)):
+        continue
+    with open(f"{out}/{fname}", encoding="utf-8") as f:
+        new = json.load(f)
+    with open(base_path, encoding="utf-8") as f:
+        old = json.load(f)
+    drift = []
+    if new["schema"] != old["schema"]:
+        drift.append(f"schema version {old['schema']} -> {new['schema']}")
+    drift += key_drift("config keys", new["config"], old["config"])
+    for i, (nr, orow) in enumerate(zip(new["results"], old["results"])):
+        drift += key_drift(f"results[{i}] keys", nr, orow)
+    assert not drift, \
+        f"{fname} drifted from benchmarks/baselines/{fname} without the " \
+        f"baseline being regenerated:\n  " + "\n  ".join(drift)
+
 pipe = [f"{r['tokens_per_sec']['pipelined'] / r['tokens_per_sec']['batched']:.2f}x"
         for r in bt["results"]]
 commits = [f"{r['commit_calls']}/{b['commit_calls']}"
@@ -99,5 +157,6 @@ commits = [f"{r['commit_calls']}/{b['commit_calls']}"
 print(f"bench smoke OK: pipelined/sync {', '.join(pipe)}; sharded/single "
       f"{', '.join(f'{r:.2f}x' for r in ratios)}; "
       f"sharded/single commit_calls {', '.join(commits)}; "
-      f"fused commit worst case {worst:.2f}x over per-row")
+      f"fused commit worst case {worst:.2f}x over per-row; "
+      f"compile counts at baseline ({', '.join(compiles)}); no schema drift")
 EOF

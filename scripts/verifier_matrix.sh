@@ -1,0 +1,100 @@
+#!/usr/bin/env bash
+# Verifier-matrix CI gate (per-PR tier): run the quick Table-1 cross-verifier
+# matrix (benchmarks/verifier_tables.py --matrix) over the WHOLE
+# core/verify.py registry and FAIL if
+#
+#   * the harness crashes,
+#   * any verifier's matrix coverage is missing — every registered name must
+#     appear in every cell kind (a verifier added to the registry but
+#     silently dropped from the matrix is exactly the drift this gate
+#     exists to catch),
+#   * any losslessness cell's enumeration gap reaches the gate (1e-9): the
+#     verifier's composed block law no longer equals the target process,
+#   * any engine exactness cell fails: batched+pipelined (and, in full mode,
+#     sharded) serving must emit token-identical outputs to the sequential
+#     engine for EVERY verifier on BOTH target-pass strategies,
+#   * the emitted BENCH_verifier_matrix.json drifts structurally (schema
+#     version / config keys / per-row keys per cell kind) from the committed
+#     baseline benchmarks/baselines/BENCH_verifier_matrix.json.
+#
+# MATRIX_FULL=1 runs the full temperature x config grid (the weekly tier /
+# run-slow label); the quick slice is the default on PRs.
+#
+#   BENCH_OUT=dir   where to write the JSON artifact (default bench_out/)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+OUT="${BENCH_OUT:-bench_out}"
+mkdir -p "$OUT"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+FULL_FLAG=""
+if [[ "${MATRIX_FULL:-0}" == "1" ]]; then
+    FULL_FLAG="--full"
+fi
+python benchmarks/verifier_tables.py --matrix $FULL_FLAG \
+    --json "$OUT/BENCH_verifier_matrix.json"
+
+python - "$OUT" <<'EOF'
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.verify import verifier_names
+
+out = sys.argv[1]
+with open(f"{out}/BENCH_verifier_matrix.json", encoding="utf-8") as f:
+    doc = json.load(f)
+assert doc["bench"] == "verifier_matrix" and doc["schema"] == 1, "unknown bench schema"
+
+gate = doc["config"]["lossless_gate"]
+cells = {"lossless", "block_efficiency", "exactness"}
+seen = {c: set() for c in cells}
+for r in doc["results"]:
+    seen[r["cell"]].add(r["verifier"])
+    if r["cell"] == "lossless":
+        assert r["gap"] < gate, \
+            f"{r['verifier']} ({r['K']},{r['L1']},{r['L2']}): losslessness " \
+            f"gap {r['gap']:.3e} >= {gate} — the verifier's block law no " \
+            f"longer matches the target process"
+    elif r["cell"] == "exactness":
+        assert r["exact"], \
+            f"{r['verifier']} on {r['arch']} ({r['strategy']}): batched+" \
+            f"pipelined output diverged from the sequential engine"
+        assert r.get("sharded_exact", True), \
+            f"{r['verifier']} on {r['arch']}: sharded output diverged " \
+            f"from the sequential engine"
+
+registered = set(verifier_names())
+for cell in sorted(cells):
+    missing = registered - seen[cell]
+    assert not missing, \
+        f"registered verifiers missing from the {cell} cells: " \
+        f"{sorted(missing)} — the matrix no longer covers the registry"
+
+# structural drift vs the committed baseline (same contract as bench_smoke)
+with open("benchmarks/baselines/BENCH_verifier_matrix.json", encoding="utf-8") as f:
+    base = json.load(f)
+drift = []
+if doc["schema"] != base["schema"]:
+    drift.append(f"schema version {base['schema']} -> {doc['schema']}")
+if set(doc["config"]) != set(base["config"]):
+    drift.append(f"config keys: added {sorted(set(doc['config']) - set(base['config']))}, "
+                 f"removed {sorted(set(base['config']) - set(doc['config']))}")
+base_keys = {r["cell"]: set(r) for r in base["results"]}
+for r in doc["results"]:
+    extra = set(r) - base_keys[r["cell"]] - {"sharded_exact"}  # full-mode-only key
+    missing = base_keys[r["cell"]] - set(r)
+    if extra or missing:
+        drift.append(f"{r['cell']} row keys: added {sorted(extra) or '-'}, "
+                     f"removed {sorted(missing) or '-'}")
+        break
+assert not drift, \
+    "BENCH_verifier_matrix.json drifted from its committed baseline " \
+    "without regeneration:\n  " + "\n  ".join(drift)
+
+n = {c: len(seen[c]) for c in sorted(cells)}
+worst = max(r["gap"] for r in doc["results"] if r["cell"] == "lossless")
+print(f"verifier matrix OK ({doc['config']['mode']}): "
+      f"{len(registered)} verifiers x {n} cells; worst lossless gap {worst:.2e}; "
+      f"all engine cells token-exact; no schema drift")
+EOF

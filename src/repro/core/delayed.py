@@ -42,12 +42,19 @@ def expected_block_efficiency(tree: DraftTree, solver: str) -> float:
     return total
 
 
+def expected_block_efficiency_dist(tree: DraftTree, verifier: str) -> float:
+    """E[tau + 1 | tree] for ANY registered verifier, from its exact
+    conditional block law (core/verify.py registry).  The OT family also has
+    the cheaper Eq. 3 recursion above; this is the generic path."""
+    from repro.core.verify import get_verifier
+
+    d = get_verifier(verifier).output_dist(tree)
+    return sum(len(blk) * m for blk, m in d.items())
+
+
 def expected_block_efficiency_traversal(tree: DraftTree) -> float:
     """E[tau + 1 | tree] for Traversal (from its exact conditional law)."""
-    from repro.core.traversal import verify_traversal_output_dist
-
-    d = verify_traversal_output_dist(tree)
-    return sum(len(blk) * m for blk, m in d.items())
+    return expected_block_efficiency_dist(tree, "traversal")
 
 
 def estimate_block_efficiency(
@@ -61,15 +68,23 @@ def estimate_block_efficiency(
     context: tuple = (),
     s: int = 4,
 ) -> float:
-    """Outer expectation of Eq. 3 over ``s`` i.i.d. delayed-tree samples."""
+    """Outer expectation of Eq. 3 over ``s`` i.i.d. delayed-tree samples.
+
+    ``solver`` is any registered verifier name: the OT family goes through
+    the Eq. 3 branching recursion, everything else through its exact
+    conditional block law — so selector oracles (analytic_best_action, NDE
+    labelling) work for the whole verifier zoo."""
+    from repro.core.verify import get_verifier
+
+    spec = get_verifier(solver)
     vals = []
     for _ in range(s):
         tree = build_delayed_tree(rng, q_fn, K, L1, L2, root_context=context)
         attach_target(tree, p_fn, root_context=context)
-        if solver == "traversal":
-            vals.append(expected_block_efficiency_traversal(tree))
-        else:
+        if spec.on_device:  # top-down OT: exact Eq. 3 branching recursion
             vals.append(expected_block_efficiency(tree, solver))
+        else:
+            vals.append(expected_block_efficiency_dist(tree, solver))
     return float(np.mean(vals))
 
 

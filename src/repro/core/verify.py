@@ -20,8 +20,19 @@ nested single-uniform coupling:
     correction at tau = L:      p_{L+1}
 
 which reduces to naive speculative sampling's accept/residual at L=1.
+
+The module also owns the *verifier registry* — the single place a
+verification algorithm is given a name.  Every engine mode (single-stream,
+batched, sharded, pipelined) resolves ``EngineConfig.verifier`` through
+``get_verifier``, and the losslessness property tests, the Table-1 matrix
+harness and ``launch/serve.py --verifier`` all enumerate ``VERIFIERS`` — a
+new verifier registered here is tested, benchmarked and servable by
+construction (docs/verifiers.md).
 """
 from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -148,3 +159,148 @@ def verify_bv_output_dist(tree: DraftTree) -> dict:
 
     _single_path(tree)
     return verify_traversal_output_dist(tree)
+
+
+# ----------------------------------------------------------------- registry --
+
+
+@runtime_checkable
+class Verifier(Protocol):
+    """The pluggable verifier contract.
+
+    ``verify``      samples one verification round on a target-attached tree
+                    and returns (accepted_tokens, correction_token).
+    ``output_dist`` is the *exact* conditional law of the emitted block given
+                    the tree, {block_tuple: probability} — the object the
+                    enumeration losslessness tests integrate over trees.
+    """
+
+    name: str
+
+    def verify(self, tree: DraftTree, rng: np.random.Generator) -> tuple[list[int], int]: ...
+
+    def output_dist(self, tree: DraftTree) -> dict: ...
+
+
+@dataclass(frozen=True)
+class VerifierSpec:
+    """Registry entry.  ``verify``/``output_dist`` are plain callables with
+    the Verifier protocol signatures.
+
+    multipath : handles branching trees (K >= 2); single-path verifiers
+                (naive_single, bv) require K == 1 drafts.
+    on_device : has a batched on-device OT solve (core/otlp_jax.py) behind
+                ``EngineConfig.verify_on_device`` — the top-down OT family.
+    cite      : short provenance string surfaced by docs and the matrix
+                harness.
+    """
+
+    name: str
+    _verify: Callable = field(repr=False)
+    _output_dist: Callable = field(repr=False)
+    multipath: bool = True
+    on_device: bool = False
+    cite: str = ""
+
+    def verify(self, tree: DraftTree, rng: np.random.Generator):
+        return self._verify(tree, rng)
+
+    def output_dist(self, tree: DraftTree) -> dict:
+        return self._output_dist(tree)
+
+
+VERIFIERS: dict[str, VerifierSpec] = {}
+
+
+def register_verifier(spec: VerifierSpec) -> VerifierSpec:
+    """Register a verifier by name.  Fails loudly on duplicates — shadowing a
+    verification algorithm silently is never what anyone wants."""
+    if spec.name in VERIFIERS:
+        raise ValueError(f"verifier {spec.name!r} already registered")
+    VERIFIERS[spec.name] = spec
+    return spec
+
+
+def get_verifier(name: str) -> VerifierSpec:
+    """Resolve a verifier by name; unknown names list the registry."""
+    try:
+        return VERIFIERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown verifier {name!r}; registered: {', '.join(sorted(VERIFIERS))}"
+        ) from None
+
+
+def verifier_names() -> list[str]:
+    return sorted(VERIFIERS)
+
+
+def _register_builtins():
+    from repro.core.greedy_bv import greedy_mpbv_output_dist, verify_greedy_mpbv
+    from repro.core.traversal import verify_traversal, verify_traversal_output_dist
+    from repro.core.univer import univer_output_dist, verify_univer
+
+    _OT_CITES = {
+        "nss": "NSS OT coupling (paper Sec. 3.2)",
+        "naive": "k-draw naive coupling (paper Sec. 3.2)",
+        "naivetree": "alias of naive (tree form)",
+        "spectr": "SpecTr (Sun et al., 2023)",
+        "specinfer": "SpecInfer (Miao et al., 2023)",
+        "khisti": "two-stage importance coupling (Khisti et al., 2024)",
+    }
+    for solver in _OT_CITES:
+
+        def _v(tree, rng, _s=solver):
+            return verify_topdown(tree, _s, rng)
+
+        def _d(tree, _s=solver):
+            return verify_topdown_output_dist(tree, _s)
+
+        register_verifier(VerifierSpec(solver, _v, _d, multipath=True, on_device=True,
+                                       cite=_OT_CITES[solver]))
+    register_verifier(VerifierSpec(
+        "traversal", verify_traversal, verify_traversal_output_dist,
+        multipath=True, cite="Traversal Verification (Weng et al., 2025)"))
+    register_verifier(VerifierSpec(
+        "naive_single", verify_naive_single, _naive_single_output_dist,
+        multipath=False, cite="speculative sampling (Leviathan et al., 2023)"))
+    register_verifier(VerifierSpec(
+        "bv", verify_bv, verify_bv_output_dist,
+        multipath=False, cite="Block Verification (Sun et al., 2024)"))
+    register_verifier(VerifierSpec(
+        "univer", verify_univer, univer_output_dist,
+        multipath=True, cite="UniVer unified multi-step x multi-draft (arXiv 2605.04543)"))
+    register_verifier(VerifierSpec(
+        "greedy_mpbv", verify_greedy_mpbv, greedy_mpbv_output_dist,
+        multipath=True, cite="Greedy Multi-Path Block Verification (arXiv 2602.16961)"))
+
+
+def _naive_single_output_dist(tree: DraftTree) -> dict:
+    """Exact emitted-block law of naive single-path speculative sampling."""
+    path = _single_path(tree)
+    out: dict = {}
+    node, mass = 0, 1.0
+    prefix: tuple = ()
+    for v in path:
+        t = int(tree.tokens[v])
+        p, q = np.asarray(tree.p[node], np.float64), np.asarray(tree.q[node], np.float64)
+        a = min(1.0, float(p[t]) / max(float(q[t]), 1e-300))
+        resid = _pos(p - q)
+        if a < 1.0 and resid.sum() > 0:
+            resid = _norm(resid)
+            for s, ps in enumerate(resid):
+                if ps > 0:
+                    key = prefix + (s,)
+                    out[key] = out.get(key, 0.0) + mass * (1.0 - a) * float(ps)
+        mass *= a
+        prefix = prefix + (t,)
+        node = v
+    p = np.asarray(tree.p[node], np.float64)
+    for s, ps in enumerate(p):
+        if ps > 0:
+            key = prefix + (s,)
+            out[key] = out.get(key, 0.0) + mass * float(ps)
+    return out
+
+
+_register_builtins()

@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke
+from repro.core.verify import verifier_names
 from repro.models.transformer import init_params
 from repro.serving.batch_engine import (
     BatchedSpeculativeEngine,
@@ -65,11 +66,15 @@ def make_draft_cfg(cfg):
     return cfg.replace(**kw)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The serving CLI surface, exposed for tests: every registry verifier
+    must round-trip through ``--verifier`` (tests/test_verifiers.py)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--verifier", default="specinfer")
+    ap.add_argument("--verifier", default="specinfer", choices=verifier_names(),
+                    help="verification algorithm (core/verify.py registry; "
+                         "single-path verifiers bv/naive_single need --K 1)")
     ap.add_argument("--K", type=int, default=2)
     ap.add_argument("--L1", type=int, default=2)
     ap.add_argument("--L2", type=int, default=2)
@@ -101,7 +106,11 @@ def main(argv=None):
                          "verify/retire tail with the next step's dispatched "
                          "device work (token-identical; --no-pipeline "
                          "restores strictly sequential steps)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     dcfg = make_draft_cfg(cfg)

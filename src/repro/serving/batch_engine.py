@@ -100,6 +100,7 @@ import numpy as np
 
 from repro.core.traversal import delayed_structure
 from repro.core.trees import DraftTree
+from repro.core.verify import get_verifier
 from repro.launch.mesh import shard_meshes
 from repro.launch.sharding import pad_slots, pool_shardings
 from repro.models.cache import (
@@ -116,6 +117,7 @@ from repro.serving.engine import (
     EngineConfig,
     SamplingParams,
     SpeculativeEngine,
+    _compiled_signatures,
     draw_token,
     to_verifier_dtype,
     verify_tree,
@@ -216,6 +218,7 @@ class BatchedSpeculativeEngine:
         assert not ecfg.verify_on_device, \
             "batched serving verifies per-stream on host (verify_on_device consumes " \
             "randomness differently and would break batch-vs-single exactness)"
+        get_verifier(ecfg.verifier)  # fail loudly on unknown names, at build time
         self.tc, self.tp = target_cfg, target_params
         self.dc, self.dp = draft_cfg, draft_params
         self.ecfg = ecfg
@@ -314,6 +317,11 @@ class BatchedSpeculativeEngine:
             kw = {} if donate_argnums is None else {"donate_argnums": donate_argnums}
             self._jit_cache[name] = jax.jit(fn, **kw)
         return self._jit_cache[name]
+
+    def jit_compile_count(self) -> int:
+        """Compiled signatures across this engine's jit cache — the cold-start
+        compile budget bench_smoke.sh gates."""
+        return sum(_compiled_signatures(fn) for fn in self._jit_cache.values())
 
     def _stage(self, name, shape, dtype, fill=0):
         """Reusable host staging buffer for per-step index arrays
@@ -1432,6 +1440,12 @@ class ShardedBatchedSpeculativeEngine:
             kw = {} if donate_argnums is None else {"donate_argnums": donate_argnums}
             self._jit_cache[name] = jax.jit(fn, **kw)
         return self._jit_cache[name]
+
+    def jit_compile_count(self) -> int:
+        """Compile budget of the whole sharded deployment: every shard's jit
+        cache plus the engine-level grouped-commit cache."""
+        return (sum(sh.jit_compile_count() for sh in self.shards)
+                + sum(_compiled_signatures(fn) for fn in self._jit_cache.values()))
 
     def _finish_order(self, sis: list[int]) -> list[int]:
         """The order shards' in-flight steps are VERIFIED in.  Shards are

@@ -28,14 +28,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.trees import DraftTree, tree_ancestor_mask
-from repro.core.traversal import verify_traversal
-from repro.core.verify import verify_bv, verify_naive_single, verify_topdown
+from repro.core.verify import VERIFIERS, get_verifier
 from repro.models.cache import fork_streams
 from repro.models.transformer import forward, init_cache
 from repro.sampling import warp_logits
 from repro.serving.serve_step import make_pool_commit_step, next_pow2
 
-TOPDOWN = {"nss", "naive", "naivetree", "spectr", "specinfer", "khisti"}
+# top-down OT verifiers with a batched on-device solve (core/otlp_jax.py) —
+# derived from registry metadata, not a hand-maintained name list
+TOPDOWN = frozenset(n for n, s in VERIFIERS.items() if s.on_device)
 
 VERIFIER_DTYPE = np.float64
 
@@ -61,15 +62,20 @@ def draw_token(rng: np.random.Generator, dist: np.ndarray) -> int:
 
 
 def verify_tree(tree: DraftTree, verifier: str, rng: np.random.Generator):
-    """Host-side verifier dispatch — the single mapping both engines share.
-    Returns (accepted_tokens, correction_token)."""
-    if verifier == "traversal":
-        return verify_traversal(tree, rng)
-    if verifier == "bv":
-        return verify_bv(tree, rng)
-    if verifier == "naive_single":
-        return verify_naive_single(tree, rng)
-    return verify_topdown(tree, verifier, rng)
+    """Host-side verifier dispatch — the single mapping both engines share,
+    resolved through the core/verify.py registry, so every registered
+    verifier works identically under single-stream, batched, sharded and
+    pipelined serving.  Returns (accepted_tokens, correction_token)."""
+    return get_verifier(verifier).verify(tree, rng)
+
+
+def _compiled_signatures(fn) -> int:
+    """Number of XLA compilations a ``jax.jit`` wrapper holds.  Falls back to
+    counting the wrapper itself where jax does not expose the cache size."""
+    try:
+        return int(fn._cache_size())
+    except (AttributeError, TypeError):
+        return 1
 
 
 def fork_cache(cfg, cache: dict, K: int) -> dict:
@@ -103,6 +109,7 @@ class SpeculativeEngine:
     def __init__(self, target_cfg, target_params, draft_cfg, draft_params, ecfg: EngineConfig,
                  sampling: SamplingParams | None = None, selector=None):
         assert target_cfg.vocab == draft_cfg.vocab
+        get_verifier(ecfg.verifier)  # fail loudly on unknown names, at build time
         self.tc, self.tp = target_cfg, target_params
         self.dc, self.dp = draft_cfg, draft_params
         self.ecfg = ecfg
@@ -125,6 +132,12 @@ class SpeculativeEngine:
             kw = {} if donate_argnums is None else {"donate_argnums": donate_argnums}
             self._jit_cache[name] = jax.jit(fn, **kw)
         return self._jit_cache[name]
+
+    def jit_compile_count(self) -> int:
+        """Compiled signatures across this engine's jit cache — the cold-start
+        compile budget bench_smoke.sh gates (one cache entry can hold several
+        compilations when a name is reused across shapes/dtypes)."""
+        return sum(_compiled_signatures(fn) for fn in self._jit_cache.values())
 
     def _warp(self, logits):
         return warp_logits(logits, self.sampling.temperature, self.sampling.top_p)

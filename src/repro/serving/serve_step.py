@@ -13,6 +13,13 @@ pool steps:      the continuous-batching forms over a per-stream cache pool
                  traffic for these is index arrays only: ancestor masks are
                  composed on device from parent pointers and the commit is
                  driven by (node_path, path_len, C) tables.
+
+Every step here is verifier-agnostic by design: verification is host-side
+per stream, resolved through the core/verify.py registry (engine.verify_tree),
+and the device steps only ever see its *outcome* as (node_path, path_len)
+commit tables.  That contract is what lets any registered verifier run under
+batched, sharded and pipelined serving token-identically with zero changes
+to the compiled step set.
 """
 from __future__ import annotations
 

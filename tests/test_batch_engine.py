@@ -49,7 +49,7 @@ def _single_outputs(tc, tp, dc, dp, ecfg, prompts, seeds, max_new, sampling=None
     return outs
 
 
-@pytest.mark.parametrize("verifier", ["specinfer", "traversal"])
+@pytest.mark.parametrize("verifier", ["specinfer", "traversal", "univer", "greedy_mpbv"])
 def test_batch_matches_single_tree_strategy(dense_models, verifier):
     tc, tp, dc, dp = dense_models
     ecfg = EngineConfig(verifier=verifier, K=2, L1=1, L2=1, max_cache=128)
@@ -61,7 +61,7 @@ def test_batch_matches_single_tree_strategy(dense_models, verifier):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("verifier", ["specinfer", "traversal"])
+@pytest.mark.parametrize("verifier", ["specinfer", "traversal", "univer", "greedy_mpbv"])
 @pytest.mark.parametrize("cfg", [SSM_CFG, HYB_CFG], ids=["ssm", "hybrid"])
 def test_batch_matches_single_replay_strategy(cfg, verifier):
     params = init_params(cfg, jax.random.PRNGKey(0))

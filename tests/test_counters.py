@@ -144,12 +144,16 @@ def test_bench_surface_sharded_counters(dense_models, monkeypatch):
     tc, tp, dc, dp = dense_models
     ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
     monkeypatch.setattr(bt, "ShardedBatchedSpeculativeEngine", _CountingSharded)
-    eng, workload, commit_stats, occ = bt.prepare_batched(
+    eng, workload, commit_stats, occ, warm = bt.prepare_batched(
         tc, tp, dc, dp, ecfg, None, PROMPTS, 10, SEEDS, data_shards=2)
     assert commit_stats["commit_calls"] == eng.true_commits[0] > 0
     assert commit_stats["commit_ms"] > 0
     assert commit_stats["shard_blocks_peak"] == eng.true_blocks_peak
     assert occ and occ["target"]["blocks_used"] > 0
+    # the compile-hygiene surface: the warmup pass compiled something, and
+    # the census sums every shard's cache (>= the grouped-commit entry alone)
+    assert warm["compile_count"] == eng.jit_compile_count() > 0
+    assert warm["warmup_secs"] > 0
     # the timed-pass counters start from zero, not the warmup's tallies
     assert eng.counters["commit_calls"] == 0
 
@@ -160,7 +164,7 @@ def test_bench_surface_overlap_invariant(dense_models, monkeypatch):
     tc, tp, dc, dp = dense_models
     ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
     monkeypatch.setattr(bt, "BatchedSpeculativeEngine", _CountingSingle)
-    eng, workload, _, _ = bt.prepare_batched(
+    eng, workload, _, _, _ = bt.prepare_batched(
         tc, tp, dc, dp, ecfg, None, PROMPTS, 10, SEEDS, pipeline=True)
     eng.true_steps = 0
     workload()

@@ -2,8 +2,10 @@
 
 Exact enumeration over BOTH draft-tree randomness and verifier randomness:
 G(y) (the composed prefix probability, see core/enumerate.py) must match the
-target process for every string, for every verifier, on delayed trees of
-several (K, L1, L2) including root rollouts and pure paths.
+target process for every string, for EVERY verifier in the core/verify.py
+registry, on delayed trees of several (K, L1, L2) including root rollouts,
+pure paths and the K = 1 reductions.  New verifiers are covered the moment
+they register — the parameterization reads the registry, not a name list.
 """
 import pytest
 from _propcheck import given, settings, strategies as st
@@ -14,35 +16,30 @@ from repro.core.enumerate import (
     lossless_gap,
 )
 from repro.core.traversal import verify_traversal_output_dist
-from repro.core.verify import verify_bv_output_dist, verify_topdown_output_dist
+from repro.core.verify import VERIFIERS, verifier_names, verify_topdown_output_dist
 
-TOPDOWN = ["nss", "naivetree", "spectr", "specinfer", "khisti"]
-CASES = [(2, 0, 1), (2, 1, 1), (3, 0, 2), (2, 1, 2)]
+# multipath verifiers also see K = 1 trees (their single-path reductions:
+# univer -> BV, greedy_mpbv -> BV, specinfer -> single-draft rejection)
+MULTIPATH_CASES = [(2, 0, 1), (2, 1, 1), (2, 1, 2), (1, 0, 2)]
+SINGLE_CASES = [(1, 0, 2), (1, 1, 1), (1, 2, 1)]
 
 
-@pytest.mark.parametrize("solver", TOPDOWN)
-@pytest.mark.parametrize("K,L1,L2", [(2, 0, 1), (2, 1, 2)])
-def test_topdown_lossless(solver, K, L1, L2):
+def registry_cases():
+    return [
+        (name, case)
+        for name in verifier_names()
+        for case in (MULTIPATH_CASES if VERIFIERS[name].multipath else SINGLE_CASES)
+    ]
+
+
+@pytest.mark.parametrize("verifier,case", registry_cases(),
+                         ids=lambda v: v if isinstance(v, str) else "x".join(map(str, v)))
+def test_registry_lossless(verifier, case):
+    K, L1, L2 = case
     model = RandomModel(3, seed=11, divergence=0.7)
-    bd = expected_block_dist(
-        lambda t: verify_topdown_output_dist(t, solver), model, K, L1, L2
-    )
-    assert lossless_gap(bd, model, L1 + L2 + 1) < 1e-12
-
-
-@pytest.mark.parametrize("K,L1,L2", CASES + [(1, 0, 2), (1, 2, 1)])
-def test_traversal_lossless(K, L1, L2):
-    model = RandomModel(3, seed=5, divergence=0.8)
-    bd = expected_block_dist(verify_traversal_output_dist, model, K, L1, L2)
+    bd = expected_block_dist(VERIFIERS[verifier].output_dist, model, K, L1, L2)
     assert abs(sum(bd.values()) - 1.0) < 1e-12
     assert lossless_gap(bd, model, L1 + L2 + 1) < 1e-12
-
-
-@pytest.mark.parametrize("L", [1, 2, 3])
-def test_bv_lossless(L):
-    model = RandomModel(3, seed=7, divergence=0.9)
-    bd = expected_block_dist(verify_bv_output_dist, model, 1, 0, L)
-    assert lossless_gap(bd, model, L + 1) < 1e-12
 
 
 @settings(max_examples=8, deadline=None)
@@ -60,6 +57,17 @@ def test_specinfer_lossless_with_zero_support(seed):
     bd = expected_block_dist(
         lambda t: verify_topdown_output_dist(t, "specinfer"), model, 2, 1, 1
     )
+    assert lossless_gap(bd, model, 3) < 1e-12
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(["univer", "greedy_mpbv"]), st.integers(0, 10_000))
+def test_new_verifiers_lossless_with_zero_support(verifier, seed):
+    """The PR-6 verifiers under sparse supports (warped/top-p analogues):
+    zero q-mass on drafted branches and zero p-mass residuals are where
+    ratio-based couplings divide by zero or leak mass."""
+    model = RandomModel(3, seed=seed, divergence=0.9, zeros=True)
+    bd = expected_block_dist(VERIFIERS[verifier].output_dist, model, 2, 1, 1)
     assert lossless_gap(bd, model, 3) < 1e-12
 
 

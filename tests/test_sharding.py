@@ -169,7 +169,7 @@ def test_sharded_pools_carry_named_shardings(dense_models):
 
 
 @pytest.mark.parametrize("pipeline", [False, True], ids=["sync", "pipelined"])
-@pytest.mark.parametrize("verifier", ["specinfer", "traversal"])
+@pytest.mark.parametrize("verifier", ["specinfer", "traversal", "univer", "greedy_mpbv"])
 def test_sharded_matches_unsharded_tree(dense_models, verifier, pipeline):
     tc, tp, dc, dp = dense_models
     ecfg = EngineConfig(verifier=verifier, K=2, L1=1, L2=1, max_cache=128)
@@ -186,7 +186,7 @@ def test_sharded_matches_unsharded_tree(dense_models, verifier, pipeline):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("pipeline", [False, True], ids=["sync", "pipelined"])
-@pytest.mark.parametrize("verifier", ["specinfer", "traversal"])
+@pytest.mark.parametrize("verifier", ["specinfer", "traversal", "univer", "greedy_mpbv"])
 def test_sharded_matches_unsharded_replay(verifier, pipeline):
     params = init_params(SSM_CFG, jax.random.PRNGKey(0))
     ecfg = EngineConfig(verifier=verifier, K=2, L1=1, L2=1, max_cache=128)

@@ -1,0 +1,101 @@
+"""The core/verify.py verifier registry contract.
+
+The registry is the single dispatch surface both engines and the bench
+harnesses resolve verification through, so its failure modes must be loud:
+unknown names fail at build time with the registered list attached,
+duplicate registration is an error, and every registered name round-trips
+through the serving CLI (launch/serve.py --verifier).
+"""
+import numpy as np
+import pytest
+
+from repro.core.enumerate import RandomModel, iter_trees
+from repro.core.verify import (
+    VERIFIERS,
+    Verifier,
+    VerifierSpec,
+    get_verifier,
+    register_verifier,
+    verifier_names,
+)
+
+EXPECTED = {"bv", "greedy_mpbv", "khisti", "naive", "naive_single", "naivetree",
+            "nss", "specinfer", "spectr", "traversal", "univer"}
+
+
+def test_registry_contents():
+    assert set(verifier_names()) == EXPECTED
+    # exactly the single-path verifiers are flagged K=1-only, and exactly
+    # the OT top-down family has the batched on-device solve
+    assert {n for n in EXPECTED if not VERIFIERS[n].multipath} == {"bv", "naive_single"}
+    assert {n for n in EXPECTED if VERIFIERS[n].on_device} == \
+        {"khisti", "naive", "naivetree", "nss", "specinfer", "spectr"}
+
+
+def test_specs_satisfy_protocol():
+    for name in verifier_names():
+        spec = get_verifier(name)
+        assert isinstance(spec, Verifier)
+        assert spec.name == name
+        assert spec.cite  # every verifier names its source
+
+
+def test_unknown_name_fails_loudly():
+    with pytest.raises(ValueError, match="unknown verifier 'nope'"):
+        get_verifier("nope")
+    # the error carries the registered names so the caller can self-serve
+    with pytest.raises(ValueError, match="specinfer"):
+        get_verifier("nope")
+
+
+def test_duplicate_registration_rejected():
+    spec = get_verifier("specinfer")
+    with pytest.raises(ValueError, match="already registered"):
+        register_verifier(VerifierSpec(name="specinfer", _verify=spec._verify,
+                                       _output_dist=spec._output_dist))
+    assert get_verifier("specinfer") is spec  # the original survived
+
+
+def test_serve_cli_roundtrip():
+    """launch/serve.py --verifier accepts every registered name and nothing
+    else — the CLI choices are derived from the registry, not a hand list."""
+    from repro.launch.serve import build_parser
+
+    for name in verifier_names():
+        args = build_parser().parse_args(["--arch", "granite-8b", "--verifier", name])
+        assert args.verifier == name
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--arch", "granite-8b", "--verifier", "nope"])
+
+
+def test_engine_rejects_unknown_verifier_at_build_time():
+    from repro.serving.engine import EngineConfig, SpeculativeEngine
+
+    ecfg = EngineConfig(verifier="nope")
+    with pytest.raises(ValueError, match="unknown verifier"):
+        # params are never touched: validation precedes any model work
+        SpeculativeEngine(_FakeCfg(), None, _FakeCfg(), None, ecfg)
+
+
+class _FakeCfg:
+    vocab = 3
+    arch_type = "dense"
+
+
+def test_sampled_block_lies_in_output_dist_support():
+    """verify() and output_dist() describe the same law: any sampled
+    (accepted + correction) block must be a support point of the exact
+    conditional block distribution, for every registered verifier."""
+    model = RandomModel(3, seed=3, divergence=0.8)
+    for name in verifier_names():
+        spec = VERIFIERS[name]
+        K = 2 if spec.multipath else 1
+        rng = np.random.default_rng(7)
+        tree, _ = next(iter_trees(model, K, 1, 1))
+        d = spec.output_dist(tree)
+        assert abs(sum(d.values()) - 1.0) < 1e-9, name
+        for trial in range(20):
+            accepted, corr = spec.verify(tree, rng)
+            blk = tuple(accepted) + (corr,)
+            assert blk in d and d[blk] > 0, \
+                f"{name}: sampled block {blk} has zero mass in output_dist"
