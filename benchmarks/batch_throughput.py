@@ -3,8 +3,9 @@ with the pipelined stepping mode measured against both.
 
     PYTHONPATH=src python benchmarks/batch_throughput.py [--arch granite-8b]
         [--batch-sizes 1,4,8] [--max-new 24] [--verifier specinfer]
-        [--ring] [--block-size 64] [--coresidency] [--no-pipeline]
-        [--data-shards 2] [--json BENCH_batch_throughput.json]
+        [--ring] [--block-size 64] [--coresidency] [--heterogeneous]
+        [--no-pipeline] [--no-ragged] [--data-shards 2]
+        [--json BENCH_batch_throughput.json]
 
 For each batch size N, serves N synthetic requests three ways:
 
@@ -120,7 +121,8 @@ _WARM_KEYS = ("commit_calls", "commit_ms", "blocks_reclaimed", "blocks_peak") \
 
 
 def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
-                    paged=True, block_size=64, pipeline=False, data_shards=1):
+                    paged=True, block_size=64, pipeline=False, data_shards=1,
+                    ragged=True, selector=None):
     """Build a batched (or sharded) engine, run the warmup/profiling pass and
     return ``(eng, workload, commit_stats, peak_occ)`` ready for timing.
 
@@ -132,13 +134,14 @@ def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
     peak occupancy are the timed pass's too."""
     if data_shards > 1:
         eng = ShardedBatchedSpeculativeEngine(
-            cfg, tp, dcfg, dp, ecfg, sampling, n_slots=len(prompts),
-            data_shards=data_shards, paged=paged, block_size=block_size,
-            pipeline=pipeline)
+            cfg, tp, dcfg, dp, ecfg, sampling, selector=selector,
+            n_slots=len(prompts), data_shards=data_shards, paged=paged,
+            block_size=block_size, pipeline=pipeline, ragged=ragged)
     else:
         eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
-                                       n_slots=len(prompts), paged=paged,
-                                       block_size=block_size, pipeline=pipeline)
+                                       selector=selector, n_slots=len(prompts),
+                                       paged=paged, block_size=block_size,
+                                       pipeline=pipeline, ragged=ragged)
     engines = eng.shards if data_shards > 1 else [eng]
 
     def workload():
@@ -178,11 +181,12 @@ def prepare_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
 
 
 def run_batched(cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
-                paged=True, block_size=64, pipeline=False, reps=1, data_shards=1):
+                paged=True, block_size=64, pipeline=False, reps=1, data_shards=1,
+                ragged=True):
     eng, workload, commit_stats, occ, _ = prepare_batched(
         cfg, tp, dcfg, dp, ecfg, sampling, prompts, max_new, seeds,
         paged=paged, block_size=block_size, pipeline=pipeline,
-        data_shards=data_shards)
+        data_shards=data_shards, ragged=ragged)
     outs, dt = _best_timed(workload, reps)
     counters = dict(eng.counters)
     counters.update(commit_stats)  # report the honest (blocked) commit numbers
@@ -225,6 +229,99 @@ def run_coresidency(cfg, tp, dcfg, dp, ecfg, sampling, seed, block_size=16):
     return peak_resident, ring_fit
 
 
+def run_heterogeneous(cfg, tp, dcfg, dp, ecfg, sampling, seed, max_new=16,
+                      block_size=64, reps=5, json_path=None):
+    """The ragged layout's headline scenario: ONE stream on an aggressive
+    NDE action co-resident with 7 thin trees.
+
+    A selector keyed on stream CONTENT (the first committed token — stable
+    across engines and shard assignments) gives stream 0 a (4, 2, 4) action
+    (19-node trees) and everyone else (1, 1, 0) (2-node trees).  Under the
+    padded layout the pool-wide power-of-two bucket follows the single
+    aggressive stream, so every thin tree ships Tpad = 19 lanes; the ragged
+    layout ships the flat node total instead.  Both layouts run the same
+    prompts/seeds and must agree token-for-token (the exactness contract);
+    timing is interleaved like the batched/pipelined comparison.  The
+    ``pad_fraction`` gap and the throughput ratio here are what
+    scripts/bench_smoke.sh gates (``BENCH_batch_throughput_hetero.json``)."""
+    n = 8
+    aggressive, thin = (4, 2, 8), (1, 1, 0)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(2, cfg.vocab, size=6).tolist() for _ in range(n)]
+    for i, p in enumerate(prompts):
+        p[0] = 1 if i == 0 else 0  # the selector's content key
+    seeds = [seed + 100 + i for i in range(n)]
+
+    def selector(stream, eng):
+        return aggressive if stream["committed"][0] == 1 else thin
+
+    def build(ragged):
+        eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
+                                       selector=selector, n_slots=n, paged=True,
+                                       block_size=block_size, ragged=ragged)
+
+        def workload():
+            rids = [eng.submit(list(p), max_new=max_new, seed=sd)
+                    for p, sd in zip(prompts, seeds)]
+            outs = eng.run()
+            return [outs[r]["tokens"] for r in rids]
+
+        workload()  # warm every shape bucket the selector mix hits
+        eng.reset_counters(("pad_nodes_total", "tree_lanes_total"))
+        return eng, workload
+
+    eng_pad, wl_pad = build(False)
+    eng_rag, wl_rag = build("always")
+    timed = _interleaved_timed({"padded": wl_pad, "ragged": wl_rag}, reps)
+    outs_pad, dt_pad = timed["padded"]
+    outs_rag, dt_rag = timed["ragged"]
+    exact = outs_pad == outs_rag
+    tok = sum(len(o) for o in outs_pad)
+
+    def pad_frac(eng):
+        c = eng.counters
+        return c["pad_nodes_total"] / max(c["tree_lanes_total"], 1)
+
+    pf_pad, pf_rag = pad_frac(eng_pad), pad_frac(eng_rag)
+    print(f"\n[heterogeneous] 1 stream @ {aggressive} + {n - 1} @ {thin}, "
+          f"max_new={max_new}")
+    print(f"  {'layout':>8} {'tok/s':>10} {'pad_fraction':>13} "
+          f"{'pad_nodes':>10} {'tree_lanes':>11}")
+    for name, dt, eng in (("padded", dt_pad, eng_pad), ("ragged", dt_rag, eng_rag)):
+        c = eng.counters
+        print(f"  {name:>8} {tok / dt:>10.2f} {pad_frac(eng):>13.3f} "
+              f"{c['pad_nodes_total']:>10} {c['tree_lanes_total']:>11}")
+    print(f"  exact={'yes' if exact else 'NO'}  "
+          f"ragged/padded throughput: {dt_pad / dt_rag:.2f}x  "
+          f"pad_fraction {pf_pad:.3f} -> {pf_rag:.3f}")
+    assert exact, "ragged layout diverged from padded on the heterogeneous mix"
+    row = {
+        "scenario": "heterogeneous",
+        "streams": n,
+        "aggressive_action": list(aggressive),
+        "thin_action": list(thin),
+        "max_new": max_new,
+        "tokens": tok,
+        "exact": bool(exact),
+        "tokens_per_sec": {"padded": tok / dt_pad, "ragged": tok / dt_rag},
+        "throughput_ratio_ragged_vs_padded": dt_pad / dt_rag,
+        "pad_fraction": {"padded": pf_pad, "ragged": pf_rag},
+        "pad_nodes_total": {"padded": eng_pad.counters["pad_nodes_total"],
+                            "ragged": eng_rag.counters["pad_nodes_total"]},
+        "tree_lanes_total": {"padded": eng_pad.counters["tree_lanes_total"],
+                             "ragged": eng_rag.counters["tree_lanes_total"]},
+    }
+    if json_path:
+        write_bench_json(json_path, "batch_throughput_hetero",
+                         {"arch": cfg.name, "verifier": ecfg.verifier,
+                          "streams": n, "aggressive_action": list(aggressive),
+                          "thin_action": list(thin), "max_new": max_new,
+                          "block_size": block_size, "max_cache": ecfg.max_cache,
+                          "seed": seed}, [row])
+        print(f"wrote {json_path}")
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -247,6 +344,15 @@ def main(argv=None):
     ap.add_argument("--coresidency", action="store_true",
                     help="run the long+short co-residency scenario instead of "
                          "the throughput sweep")
+    ap.add_argument("--heterogeneous", action="store_true",
+                    help="run the adversarial padding-waste scenario (one "
+                         "aggressive-action stream + 7 thin trees, padded vs "
+                         "ragged layout) instead of the throughput sweep")
+    ap.add_argument("--ragged", default=True, action=argparse.BooleanOptionalAction,
+                    help="ragged node-major tree dispatch for the batched/"
+                         "pipelined columns (auto: ragged whenever the flat "
+                         "node buffer beats the padded lane count; "
+                         "--no-ragged pins the padded layout)")
     ap.add_argument("--pipeline", default=True, action=argparse.BooleanOptionalAction,
                     help="also measure the pipelined stepping mode "
                          "(--no-pipeline skips that column)")
@@ -272,6 +378,14 @@ def main(argv=None):
                         block_size=min(args.block_size, 16))
         return []
 
+    if args.heterogeneous:
+        print(f"arch={args.arch}(smoke) verifier={args.verifier} "
+              f"scenario=heterogeneous")
+        run_heterogeneous(cfg, tp, dcfg, dp, ecfg, sampling, args.seed,
+                          max_new=args.max_new, block_size=args.block_size,
+                          reps=args.reps, json_path=args.json)
+        return []
+
     sizes = [int(s) for s in args.batch_sizes.split(",")]
     pool = "ring" if args.ring else f"paged(block={args.block_size})"
     if args.data_shards > 1:
@@ -294,18 +408,26 @@ def main(argv=None):
         eng_b, wl_b, counters, occ, warm_b = prepare_batched(
             cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
             paged=not args.ring, block_size=args.block_size,
-            data_shards=args.data_shards)
+            data_shards=args.data_shards, ragged=args.ragged)
         workloads = {"batched": wl_b}
         eng_p, warm_p = None, {}
         if args.pipeline:
             eng_p, wl_p, pcommit, _, warm_p = prepare_batched(
                 cfg, tp, dcfg, dp, ecfg, sampling, prompts, args.max_new, seeds,
                 paged=not args.ring, block_size=args.block_size, pipeline=True,
-                data_shards=args.data_shards)
+                data_shards=args.data_shards, ragged=args.ragged)
             workloads["pipelined"] = wl_p
         timed = _interleaved_timed(workloads, args.reps)
         outs_b, dt_b = timed["batched"]
         counters.update({k: eng_b.counters[k] for k in _OVERLAP_KEYS})
+        # padding-waste accounting for the tree pass (warmup + timed passes
+        # of the same deterministic workload, so the FRACTION is per-pass)
+        pad_nodes = eng_b.counters["pad_nodes_total"]
+        tree_lanes = eng_b.counters["tree_lanes_total"]
+        pad_fraction = pad_nodes / max(tree_lanes, 1)
+        shard_pad_fraction = (
+            [sh.counters["pad_nodes_total"] / max(sh.counters["tree_lanes_total"], 1)
+             for sh in eng_b.shards] if args.data_shards > 1 else None)
         # actual emitted tokens (an evicted request returns fewer than
         # max_new); the exactness checks below pin all modes to this count
         tok = sum(len(o) for o in outs_s)
@@ -334,7 +456,10 @@ def main(argv=None):
         if dt_p:
             line += f" {tok / dt_p:>16.2f} {dt_b / dt_p:>8.2f}x"
         line += (f" {'yes' if exact and pipe_exact else 'NO':>6}"
-                 f"   commit: {counters['commit_calls']} calls, "
+                 f"   pad: {pad_fraction:.2f}"
+                 + ("(" + "/".join(f"{f:.2f}" for f in shard_pad_fraction) + ")"
+                    if shard_pad_fraction else "")
+                 + f"   commit: {counters['commit_calls']} calls, "
                  f"{counters['commit_ms']:.1f} ms ({counters['commit_ms'] / cc:.2f} ms/call)")
         if pcounters:
             line += (f"   overlap: {pcounters['pipeline_ahead']} ahead, "
@@ -362,6 +487,10 @@ def main(argv=None):
             "blocks_peak": counters["blocks_peak"],
             "blocks_reclaimed": counters["blocks_reclaimed"],
             "shard_blocks_peak": counters.get("shard_blocks_peak"),
+            "pad_nodes_total": pad_nodes,
+            "tree_lanes_total": tree_lanes,
+            "pad_fraction": pad_fraction,
+            "shard_pad_fraction": shard_pad_fraction,
             "pipeline_ahead": pcounters.get("pipeline_ahead"),
             "pipeline_stalls": pcounters.get("pipeline_stalls"),
             "pipeline_iterations": pcounters.get("pipeline_iterations"),
@@ -387,7 +516,7 @@ def main(argv=None):
                           "K": args.K, "L1": args.L1, "L2": args.L2,
                           "max_new": args.max_new, "batch_sizes": sizes,
                           "pool": pool, "block_size": args.block_size,
-                          "data_shards": args.data_shards,
+                          "data_shards": args.data_shards, "ragged": args.ragged,
                           "max_cache": ecfg.max_cache, "seed": args.seed},
                          json_rows)
         print(f"wrote {args.json}")

@@ -25,6 +25,13 @@
 #     baseline — schema version, config key set, or per-row result key
 #     set — without the baseline being regenerated.  Added or removed
 #     keys are listed; silent schema drift is how gates rot,
+#   * the heterogeneous padding-waste scenario (one aggressive-action
+#     stream + 7 thin trees — benchmarks/batch_throughput.py
+#     --heterogeneous) loses ragged-vs-padded exactness, its ragged
+#     pad_fraction stops DROPPING below the padded layout's, or ragged
+#     throughput falls below BENCH_TOL x the padded layout — the ragged
+#     dispatch must beat padding where padding is worst, or it has no
+#     reason to exist,
 #   * the --data-shards 2 host-local run loses exactness, its
 #     commit_calls exceed the single-shard run's by more than one
 #     dispatch per shard (the grouped cross-shard commit batches the
@@ -55,6 +62,8 @@ python benchmarks/batch_throughput.py --arch granite-8b --batch-sizes 8 \
 python benchmarks/batch_throughput.py --arch granite-8b --batch-sizes 8 \
     --max-new 12 --reps 3 --data-shards 2 --no-pipeline \
     --json "$OUT/BENCH_batch_throughput_sharded.json"
+python benchmarks/batch_throughput.py --arch granite-8b --heterogeneous \
+    --max-new 12 --reps 3 --json "$OUT/BENCH_batch_throughput_hetero.json"
 python benchmarks/commit_bench.py --streams 1,8 --iters 5 --layers 2 \
     --smax 128 --json "$OUT/BENCH_commit_bench.json"
 
@@ -96,6 +105,21 @@ for row, base in zip(sh["results"], bt["results"]):
     assert sharded >= shard_tol * single, \
         f"batch={n}: sharded {sharded:.1f} tok/s < {shard_tol} x single-shard {single:.1f} tok/s"
     ratios.append(sharded / single)
+
+# --- padding-waste gate: ragged must beat padding where padding is worst ---
+with open(f"{out}/BENCH_batch_throughput_hetero.json", encoding="utf-8") as f:
+    het = json.load(f)
+hr = het["results"][0]
+assert hr["exact"], "heterogeneous: ragged output diverged from the padded layout"
+pf = hr["pad_fraction"]
+assert pf["ragged"] < pf["padded"], \
+    f"heterogeneous: ragged pad_fraction {pf['ragged']:.3f} did not drop " \
+    f"below padded {pf['padded']:.3f} — the ragged layout stopped shrinking " \
+    f"padding waste"
+htps = hr["tokens_per_sec"]
+assert htps["ragged"] >= tol * htps["padded"], \
+    f"heterogeneous: ragged {htps['ragged']:.1f} tok/s < {tol} x padded " \
+    f"{htps['padded']:.1f} tok/s"
 
 with open(f"{out}/BENCH_commit_bench.json", encoding="utf-8") as f:
     cb = json.load(f)
@@ -157,6 +181,8 @@ commits = [f"{r['commit_calls']}/{b['commit_calls']}"
 print(f"bench smoke OK: pipelined/sync {', '.join(pipe)}; sharded/single "
       f"{', '.join(f'{r:.2f}x' for r in ratios)}; "
       f"sharded/single commit_calls {', '.join(commits)}; "
+      f"hetero pad_fraction {pf['padded']:.2f} -> {pf['ragged']:.2f} ragged "
+      f"({hr['throughput_ratio_ragged_vs_padded']:.2f}x tok/s); "
       f"fused commit worst case {worst:.2f}x over per-row; "
       f"compile counts at baseline ({', '.join(compiles)}); no schema drift")
 EOF

@@ -14,7 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.decode_attention import decode_attention, paged_decode_attention
-from repro.kernels.tree_attention import paged_tree_attention, tree_attention
+from repro.kernels.tree_attention import (
+    paged_tree_attention,
+    ragged_paged_tree_attention,
+    tree_attention,
+)
 
 
 def pool_commit_kv(k, v, src, dst, *, use_pallas: bool = False, interpret: bool = True):
@@ -109,6 +113,35 @@ def gqa_paged_tree_attention(q, k_arena, v_arena, tbl, mask, *, interpret: bool 
     mb = jnp.broadcast_to(mb[:, None], (B, H, Tp, S)).reshape(B * H, Tp, S)
     out = paged_tree_attention(qf, kf, vf, tbl_f, mb, interpret=interpret)
     return out.reshape(B, H, Tp, D)[:, :, :T].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gqa_ragged_tree_attention(q, k_arena, v_arena, tbl, owner, mask, *,
+                              interpret: bool = True):
+    """Engine-layout RAGGED tree attention over a paged KV pool.
+
+    q (N, H, D) — the flat node-major buffer of every active stream's tree
+    (models/transformer.py ``ragged``); k_arena, v_arena
+    (NBLK, block, Hkv, D); tbl (B, max_blocks) int32 (-1 = unmapped);
+    owner (N,) int32 pool row per node; mask (N, S) bool over the owner
+    row's logical slots.  Returns (N, H, D).
+
+    Pads N up to a multiple of 8 (pad nodes: owner 0, mask all-False —
+    their rows are garbage and sliced off) and hands the kernel one owner
+    per 8-row Q tile; the engine's 8-aligned segment offsets guarantee
+    tiles are owner-uniform for real nodes."""
+    N, H, D = q.shape
+    nb, block = tbl.shape[1], k_arena.shape[1]
+    S = nb * block
+    Np = int(np.ceil(N / 8) * 8)
+    qp = _pad_to(q, 8, axis=0).transpose(1, 0, 2)  # (H, Np, D)
+    op = _pad_to(owner.astype(jnp.int32), 8, axis=0)
+    mp = _pad_to(mask, 8, axis=0).reshape(Np // 8, 8, S)
+    owners_t = op.reshape(Np // 8, 8)[:, 0]
+    kf, vf, tbl_f = _fold_paged_arena(k_arena, v_arena, tbl, H)
+    out = ragged_paged_tree_attention(qp, kf, vf, tbl_f, owners_t, mp,
+                                      interpret=interpret)
+    return out.transpose(1, 0, 2)[:N]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))

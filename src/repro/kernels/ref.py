@@ -58,6 +58,26 @@ def paged_gather_kv_ref(k_arena, v_arena, tbl):
     return kd, vd
 
 
+def ragged_tree_attention_ref(q, k_arena, v_arena, tbl, owner, mask):
+    """Oracle for ops.gqa_ragged_tree_attention.
+
+    q (N, H, D); k_arena, v_arena (NBLK, block, Hkv, D); tbl
+    (B, max_blocks) int32 (-1 = unmapped); owner (N,) int32; mask (N, S)
+    bool.  Gathers each node's OWNER-row logical KV view through the block
+    table, then runs the plain masked softmax with GQA broadcast."""
+    kd, vd = paged_gather_kv_ref(k_arena, v_arena, tbl[owner])  # (N, S, Hkv, hd)
+    H = q.shape[1]
+    G = H // kd.shape[2]
+    kg = jnp.repeat(kd.transpose(0, 2, 1, 3), G, axis=1)  # (N, H, S, hd)
+    vg = jnp.repeat(vd.transpose(0, 2, 1, 3), G, axis=1)
+    d = q.shape[-1]
+    s = jnp.einsum("nhd,nhsd->nhs", q.astype(jnp.float32), kg.astype(jnp.float32)) / (d**0.5)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("nhs,nhsd->nhd", w, vg.astype(jnp.float32)).astype(q.dtype)
+
+
 def decode_attention_ref(q, k, v, lengths, window: int = 0):
     """q (BH, R, D); k, v (BH, S, D); lengths (BH, 1) -> (BH, R, D)."""
     S = k.shape[1]

@@ -33,9 +33,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
-    j = pl.program_id(1)
-    nk = pl.num_programs(1)
+def _attn_tile_body(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref, j, nk):
+    """One K/V-block step of the online softmax; j is the sequential minor
+    grid axis (0-based), nk its extent."""
 
     @pl.when(j == 0)
     def _init():
@@ -68,9 +68,21 @@ def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_re
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
+    _attn_tile_body(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref,
+                    pl.program_id(1), pl.num_programs(1))
+
+
 def _paged_tree_attn_kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref):
     del tbl_ref  # consumed by the K/V index maps
     _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref)
+
+
+def _ragged_tree_attn_kernel(owners_ref, tbl_ref, q_ref, k_ref, v_ref, mask_ref,
+                             o_ref, m_ref, l_ref, acc_ref):
+    del owners_ref, tbl_ref  # consumed by the K/V index maps
+    _attn_tile_body(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref,
+                    pl.program_id(2), pl.num_programs(2))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -116,6 +128,61 @@ def paged_tree_attention(q, k_arena, v_arena, tbl, mask, *, interpret: bool = Fa
         out_shape=jax.ShapeDtypeStruct((BH, T, D), q.dtype),
         interpret=interpret,
     )(tbl, q, k_arena, v_arena, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ragged_paged_tree_attention(q, k_arena, v_arena, tbl, owners, mask, *,
+                                interpret: bool = False):
+    """Ragged node-major tree attention over a paged arena.
+
+    The Q axis is not a per-stream tree block but the FLAT ragged node
+    buffer of every active stream's tree concatenated (docs/serving.md),
+    tiled in 8-row Q tiles of UNIFORM owner (the engine 8-aligns segment
+    offsets under the pallas impl, so no tile straddles two streams):
+
+      q (H, Np, D) — head-major flat nodes, Np a multiple of 8;
+      k_arena, v_arena (Hkv*NBLK, block, D) — the head-folded arena
+        (ops._fold_paged_arena output);
+      tbl (B*H, max_blocks) — the folded per-(row, head) block table;
+      owners (Np//8,) int32 — pool row of each Q tile;
+      mask (Np//8, 8, S) bool over the owner row's LOGICAL slots.
+
+    The grid is (H, n_tiles, nb): a second scalar-prefetch operand
+    (``owners``) steers the K/V index maps — tile t of head h reads the
+    arena blocks of tbl[owners[t]*H + h, j], so each node attends over its
+    OWN stream's block table while sharing one kernel launch with every
+    co-resident tree.  Same online-softmax body as ``tree_attention``.
+    Oracle: kernels/ref.py ``ragged_tree_attention_ref``."""
+    H, Np, D = q.shape
+    block = k_arena.shape[1]
+    nb = tbl.shape[1]
+    n_tiles = Np // 8
+    assert Np % 8 == 0, Np
+    assert mask.shape == (n_tiles, 8, nb * block), (mask.shape, (n_tiles, 8, nb * block))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(H, n_tiles, nb),
+        in_specs=[
+            pl.BlockSpec((1, 8, D), lambda h, t, j, owners, tbl: (h, t, 0)),
+            pl.BlockSpec((1, block, D),
+                         lambda h, t, j, owners, tbl: (tbl[owners[t] * H + h, j], 0, 0)),
+            pl.BlockSpec((1, block, D),
+                         lambda h, t, j, owners, tbl: (tbl[owners[t] * H + h, j], 0, 0)),
+            pl.BlockSpec((1, 8, block), lambda h, t, j, owners, tbl: (t, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 8, D), lambda h, t, j, owners, tbl: (h, t, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8, 1), jnp.float32),
+            pltpu.VMEM((8, 1), jnp.float32),
+            pltpu.VMEM((8, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _ragged_tree_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((H, Np, D), q.dtype),
+        interpret=interpret,
+    )(owners, tbl, q, k_arena, v_arena, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))

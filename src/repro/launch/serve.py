@@ -106,6 +106,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "verify/retire tail with the next step's dispatched "
                          "device work (token-identical; --no-pipeline "
                          "restores strictly sequential steps)")
+    ap.add_argument("--ragged", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="ragged node-major tree batching: dispatch the tree "
+                         "pass as one flat node buffer with per-stream "
+                         "offsets whenever that is smaller than the padded "
+                         "(slots, Tpad) block (token-identical; --no-ragged "
+                         "pins the padded row-major layout)")
     return ap
 
 
@@ -129,13 +136,15 @@ def main(argv=None):
                 cfg, tp, dcfg, dp, ecfg, sampling, n_slots=args.streams,
                 data_shards=args.data_shards, paged=not args.ring,
                 block_size=args.block_size,
-                pool_blocks=args.pool_blocks or None, pipeline=args.pipeline)
+                pool_blocks=args.pool_blocks or None, pipeline=args.pipeline,
+                ragged=args.ragged)
         else:
             eng = BatchedSpeculativeEngine(cfg, tp, dcfg, dp, ecfg, sampling,
                                            n_slots=args.streams, paged=not args.ring,
                                            block_size=args.block_size,
                                            pool_blocks=args.pool_blocks or None,
-                                           pipeline=args.pipeline)
+                                           pipeline=args.pipeline,
+                                           ragged=args.ragged)
         t0 = time.time()
         rids = [
             eng.submit(rng.integers(0, cfg.vocab, size=8).tolist(),

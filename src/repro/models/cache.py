@@ -224,6 +224,56 @@ def tree_mask_from_pos(
     return (base | tree_part)[None, None]  # (1, 1, T, Smax)
 
 
+def ragged_tree_mask(
+    pos: jax.Array, q_pos: jax.Array, owner: jax.Array, slots: jax.Array,
+    parent: jax.Array, window: int = 0
+) -> jax.Array:
+    """Tree-pass mask for the RAGGED node-major layout (docs/serving.md
+    "Ragged node-major tree batching").
+
+    The active streams' trees live flattened in ONE (N,) node buffer:
+    ``owner[i]`` is node i's pool row, ``slots[i]`` its ring slot in that
+    row's pos table — ``Smax`` for padding lanes, the always-out-of-range
+    sentinel that drop-mode scatters discard — ``parent[i]`` its FLAT parent
+    index (-1 for roots and padding) and ``q_pos[i]`` its absolute position.
+    ``pos`` is the (B, Smax) slot table *after* writing the tree tokens.
+
+    Row i of the returned (N, Smax) mask admits, over node i's OWNER row:
+    committed slots per the causal/window rule, plus the slots holding node
+    i's flat-tree ancestors (self included) — exactly the admit set of
+    ``tree_mask_from_pos``'s per-stream branch, indexed by node instead of
+    (row, tree-column), so the ragged pass stays bit-identical to padded.
+    """
+    N = owner.shape[0]
+    smax = pos.shape[-1]
+    p = pos[owner]  # (N, Smax): each node masks over its owner row's slots
+    base = (p >= 0) & (p <= q_pos[:, None])
+    if window:
+        base = base & (p > q_pos[:, None] - window)
+    # cut this pass's own slots out of the causal rule (they already carry
+    # tree positions), then re-admit each node's ancestor slots explicitly
+    is_self = jnp.zeros(pos.shape, bool).at[owner, slots].set(True, mode="drop")
+    base = base & ~is_self[owner]
+    idx = jnp.arange(N, dtype=jnp.int32)
+    anc0 = idx[None, :] == idx[:, None]  # ancestor-or-self: start from self
+
+    def chase(_, carry):
+        anc, cur = carry
+        nxt = jnp.where(cur >= 0, parent[jnp.maximum(cur, 0)], -1)
+        return anc | (idx[None, :] == nxt[:, None]), nxt
+
+    anc, _ = jax.lax.fori_loop(0, N, chase, (anc0, idx))
+    # scatter ancestor admits into slot columns; .max (bool OR), NOT .set:
+    # two streams may reuse the same slot VALUE, and a foreign stream's
+    # False must not wipe a True the owner stream already accumulated
+    tree_part = (
+        jnp.zeros((N, smax), bool)
+        .at[idx[:, None], slots[None, :]]
+        .max(anc, mode="drop")
+    )
+    return base | tree_part
+
+
 # ---------------------------------------------------------- stream algebra ---
 #
 # Every cache array has at most one "stream" axis (the batch axis).  Its

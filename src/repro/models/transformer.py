@@ -24,6 +24,7 @@ from repro.models.cache import (
     init_paged_attn_cache,
     paged_append_layer_kv,
     paged_layer_view,
+    ragged_tree_mask,
     tree_mask_from_pos,
 )
 from repro.models.layers import (
@@ -150,10 +151,15 @@ def init_params(cfg, key) -> dict:
 # ----------------------------------------------------------------- blocks ----
 
 
-def _self_attention(p, cfg, x, positions, mask, layer_cache, window):
+def _self_attention(p, cfg, x, positions, mask, layer_cache, window, ragged=None):
     """Shared attention sub-block.  layer_cache: None or (k, v, slots, page)
     with page = None (dense cache) or the (B, max_blocks) block table of a
-    paged pool (models/cache.py paged layout)."""
+    paged pool (models/cache.py paged layout).
+
+    ragged: None, or the (N,) owner-row vector of the ragged node-major tree
+    pass (see forward).  Then x is (1, N, d), ``slots`` are per-NODE ring
+    slots in the owner's row (Smax sentinel = padding lane, dropped), and
+    ``mask`` is the (N, 1, 1, Smax) per-node admit mask."""
     B, T, _ = x.shape
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = project_qkv(p["attn"], cfg, h)
@@ -161,6 +167,40 @@ def _self_attention(p, cfg, x, positions, mask, layer_cache, window):
     k = rope(k, positions, cfg.rope_theta)
     new_kv = None
     page_tbl = None
+    if ragged is not None:
+        owner = ragged
+        kc, vc, slots, page_tbl = layer_cache
+        if page_tbl is None:
+            kc = kc.at[owner, slots].set(k[0].astype(kc.dtype), mode="drop")
+            vc = vc.at[owner, slots].set(v[0].astype(vc.dtype), mode="drop")
+        else:
+            # scatter each node into its owner's mapped physical lane; padding
+            # lanes (slot sentinel) and unmapped blocks route out of range
+            block = kc.shape[1]
+            smax_l = page_tbl.shape[1] * block
+            blk = page_tbl[owner, jnp.minimum(slots, smax_l - 1) // block]
+            lanes = kc.shape[0] * block
+            phys = jnp.where((slots < smax_l) & (blk >= 0), blk * block + slots % block, lanes)
+            kf = kc.reshape((lanes,) + kc.shape[2:])
+            vf = vc.reshape((lanes,) + vc.shape[2:])
+            kc = kf.at[phys].set(k[0].astype(kc.dtype), mode="drop").reshape(kc.shape)
+            vc = vf.at[phys].set(v[0].astype(vc.dtype), mode="drop").reshape(vc.shape)
+        new_kv = (kc, vc)
+        N = x.shape[1]
+        if cfg.attention_impl == "pallas" and page_tbl is not None:
+            from repro.kernels.ops import gqa_ragged_tree_attention
+
+            att = gqa_ragged_tree_attention(
+                q[0], kc, vc, page_tbl, owner, mask[:, 0, 0],
+                interpret=cfg.kernel_interpret,
+            )
+        else:
+            # XLA path: per-node gather of the owner row's logical view
+            kd, vd = (kc[owner], vc[owner]) if page_tbl is None else paged_layer_view(
+                kc, vc, page_tbl[owner]
+            )
+            att = gqa_attend(q[0][:, None], kd, vd, mask)[:, 0]
+        return x + att.reshape(1, N, -1) @ p["attn"]["wo"], new_kv
     if layer_cache is not None:
         kc, vc, slots, page_tbl = layer_cache
         if page_tbl is None:
@@ -190,9 +230,9 @@ def _self_attention(p, cfg, x, positions, mask, layer_cache, window):
 
 
 def _attn_mlp_block(p, cfg, x, positions, mask, layer_cache, window, moe=False, enc_kv=None,
-                    train=False):
+                    train=False, ragged=None):
     x = pin(x)
-    x, new_kv = _self_attention(p, cfg, x, positions, mask, layer_cache, window)
+    x, new_kv = _self_attention(p, cfg, x, positions, mask, layer_cache, window, ragged=ragged)
     aux = jnp.zeros((), jnp.float32)
     if enc_kv is not None:  # cross attention (enc-dec)
         B, T, _ = x.shape
@@ -281,6 +321,7 @@ def forward(
     enc_embeds: jax.Array | None = None,
     lens: jax.Array | None = None,
     train: bool = False,
+    ragged: dict | None = None,
 ):
     """Returns (logits, new_cache, aux).
 
@@ -303,6 +344,17 @@ def forward(
     train:         training semantics (set by loss_fn): MoE uses the bounded
                    capacity-factor dispatch instead of the exact dropless
                    one (see models/moe.py).
+    ragged:        node-major ragged tree pass (mode "tree" only; replaces
+                   ``anc``).  ``tokens`` is (1, N): every active stream's
+                   tree flattened into one node buffer.  Dict keys, each
+                   (N,) int32 except counts: ``owner`` node->pool-row,
+                   ``parent`` flat-index parent (-1 root/padding),
+                   ``depth`` node depth in its tree, ``local`` node index
+                   within its tree (-1 padding lane), ``counts`` (B,) real
+                   nodes appended per row this pass (0 idle).  Padding
+                   lanes write nothing (slot sentinel + drop scatters) and
+                   attend to nothing.  Requires a per-stream attn cache and
+                   arch_type dense/moe.  See docs/serving.md.
     """
     dt = cfg.jdtype
     if tokens is not None:
@@ -318,11 +370,18 @@ def forward(
         cache["len"] if cache is not None else jnp.zeros((), jnp.int32)
     )
     per_stream = getattr(length, "ndim", 0) == 1
-    offs = jnp.arange(T, dtype=jnp.int32) if anc is None else _tree_depths(anc, per_stream)
-    if per_stream:
-        positions = length[:, None] + (offs if offs.ndim == 2 else offs[None, :])
+    q_pos = None
+    if ragged is not None:
+        assert mode == "tree" and anc is None and lens is None
+        assert per_stream and cfg.arch_type in ("dense", "moe")
+        q_pos = length[ragged["owner"]] + ragged["depth"]  # (N,) absolute pos
+        positions = q_pos[None, :]  # rope over the node axis (B=1, T=N)
     else:
-        positions = length + offs
+        offs = jnp.arange(T, dtype=jnp.int32) if anc is None else _tree_depths(anc, per_stream)
+        if per_stream:
+            positions = length[:, None] + (offs if offs.ndim == 2 else offs[None, :])
+        else:
+            positions = length + offs
     aux_total = jnp.zeros((), jnp.float32)
 
     # ---------------- encoder (encdec) ----------------
@@ -360,7 +419,27 @@ def forward(
     if use_cache and mode == "full":
         mode = "decode"  # prefill == appending T tokens causally to an empty cache
     if has_attn:
-        if use_cache and "attn" in cache:
+        if use_cache and "attn" in cache and ragged is not None:
+            page_tbl = cache["attn"].get("block_tbl")
+            smax = cache["attn"]["pos"].shape[-1]
+            owner = ragged["owner"]
+            # node i's ring slot in its owner's row — identical to padded
+            # column local[i]'s slot, so commit arithmetic is unchanged.
+            # Padding lanes (local < 0) get the always-out-of-range sentinel
+            # smax: every .at[...].set(mode="drop") write vanishes.
+            slots = jnp.where(
+                ragged["local"] >= 0,
+                (length[owner] + jnp.maximum(ragged["local"], 0)) % smax,
+                smax,
+            )
+            new_pos = cache["attn"]["pos"].at[owner, slots].set(q_pos, mode="drop")
+            new_len = length + ragged["counts"]  # idle rows advance by 0
+            win = cfg.window if cfg.attention == "sliding_window" else 0
+            mask_full = ragged_tree_mask(
+                new_pos, q_pos, owner, slots, ragged["parent"], win
+            )[:, None, None, :]  # (N, 1, 1, Smax)
+            mask_local = mask_full  # unused: dense/moe only
+        elif use_cache and "attn" in cache:
             # paged pools keep logical capacity in the pos table; the KV
             # array's slot axis is the physical block size there
             page_tbl = cache["attn"].get("block_tbl")
@@ -381,6 +460,7 @@ def forward(
             mask_full, mask_local = _mk_masks(cfg, "full", T, None, None, None, None)
 
     # ---------------- decoder stacks ----------------
+    ragged_owner = ragged["owner"] if ragged is not None else None
     new_cache = dict(cache) if use_cache else None
     # activation checkpointing for the training path (backward recompute)
     ckpt = jax.checkpoint if (cfg.remat and not use_cache) else (lambda f: f)
@@ -397,14 +477,16 @@ def forward(
             for i in range(m - 1):
                 layer_cache = (lc[0][i], lc[1][i], slots, page_tbl) if lc is not None else None
                 h, kv, _ = _attn_mlp_block(
-                    pl[f"dense{i}"], cfg, h, positions, mask_full, layer_cache, 0
+                    pl[f"dense{i}"], cfg, h, positions, mask_full, layer_cache, 0,
+                    ragged=ragged_owner,
                 )
                 if kv is not None:
                     ks_.append(kv[0])
                     vs_.append(kv[1])
             layer_cache = (lc[0][m - 1], lc[1][m - 1], slots, page_tbl) if lc is not None else None
             h, kv, aux = _attn_mlp_block(
-                pl["moe"], cfg, h, positions, mask_full, layer_cache, 0, moe=True, train=train
+                pl["moe"], cfg, h, positions, mask_full, layer_cache, 0, moe=True, train=train,
+                ragged=ragged_owner,
             )
             if kv is not None:
                 ks_.append(kv[0])
@@ -441,7 +523,7 @@ def forward(
             layer_cache = (lc[0], lc[1], slots, page_tbl) if lc is not None else None
             h, new_kv, aux = _attn_mlp_block(
                 pl, cfg, h, positions, mask_full, layer_cache, 0, moe=moe, enc_kv=ekv,
-                train=train,
+                train=train, ragged=ragged_owner,
             )
             return h, (new_kv, aux)
 

@@ -128,6 +128,7 @@ from repro.serving.serve_step import (
     make_pool_commit_step,
     make_pool_decode_step,
     make_pool_locked_step,
+    make_pool_ragged_tree_step,
     make_pool_tree_step,
     next_pow2 as _next_pow2,
 )
@@ -172,6 +173,10 @@ class PendingStep:
     p_host: dict | None = None
     rng_state: dict | None = None
     D0: dict[int, int] | None = None
+    # tree strategy, ragged layout only: ({slot: (offset, n_nodes)}, Npad)
+    # — how the flat node-major logits/hidden buffers slice back into
+    # per-stream trees (None = padded (B, Tpad) layout)
+    roffs: object = None
     # True when this step's scheduling boundary evicted a stream: its slot
     # and block releases stand, so replaying admission against the
     # post-eviction pool would not reproduce the synchronous
@@ -210,7 +215,8 @@ class BatchedSpeculativeEngine:
                  ecfg: EngineConfig, sampling: SamplingParams | None = None,
                  selector=None, n_slots: int = 4, paged: bool = True,
                  block_size: int = 64, pool_blocks: int | None = None,
-                 pipeline: bool = False, mesh=None, shard_id: int = 0):
+                 pipeline: bool = False, mesh=None, shard_id: int = 0,
+                 ragged=True):
         assert target_cfg.vocab == draft_cfg.vocab
         assert n_slots >= 1, f"need at least one pool slot, got {n_slots}"
         assert target_cfg.arch_type not in ("encdec", "vlm"), \
@@ -260,6 +266,25 @@ class BatchedSpeculativeEngine:
             sharding=pool_shardings(mesh, dcache) if mesh is not None else None)
         # pure-recurrent caches have no attn component to page
         self.paged = isinstance(self.tpool, PagedCachePool) or isinstance(self.dpool, PagedCachePool)
+        # ragged node-major tree pass (docs/serving.md): False = always the
+        # padded (B, Tpad) layout; True = auto (ragged whenever the flat
+        # buffer is strictly smaller than the padded lane count — drain
+        # tails, heterogeneous selector actions); "always" = every tree
+        # step, regardless (the exactness tests force both layouts onto
+        # identical workloads).  The pallas impl needs the block-table
+        # kernel's Q-steering, so pallas + a non-paged (ring) target pool
+        # keeps the padded path.
+        self.ragged = ragged
+        self._ragged_ok = (
+            bool(ragged)
+            and self.strategy == "tree"
+            and target_cfg.arch_type in ("dense", "moe")
+            and not (target_cfg.attention_impl == "pallas"
+                     and not isinstance(self.tpool, PagedCachePool))
+        )
+        # pallas Q tiles are 8 rows of uniform owner, so segment offsets
+        # 8-align there; the XLA gather path packs nodes back-to-back
+        self._ragged_align = 8 if target_cfg.attention_impl == "pallas" else 1
         self.streams: dict[int, dict] = {}  # slot -> stream state
         self.queue: list[BatchRequest] = []
         self.finished: dict[int, dict] = {}
@@ -280,10 +305,16 @@ class BatchedSpeculativeEngine:
         # each decision either runs ahead or stalls — so
         # pipeline_ahead + pipeline_stalls == pipeline_iterations holds by
         # construction (the race-harness invariant, tests/test_race.py)
+        # pad_nodes_total / tree_lanes_total: padding-waste accounting for
+        # the tree pass — lanes the dispatch shipped vs real tree nodes
+        # (pad_fraction = pad_nodes_total / tree_lanes_total); the ragged
+        # layout exists to shrink it (benchmarks/batch_throughput.py gates
+        # it under the heterogeneous scenario)
         self.counters = {"target_calls": 0, "target_tokens": 0, "draft_calls": 0,
                          "draft_tokens": 0, "accepted": 0, "blocks": 0, "evicted": 0,
                          "commit_calls": 0, "commit_ms": 0.0,
                          "blocks_reclaimed": 0, "admit_blocked": 0, "blocks_peak": 0,
+                         "pad_nodes_total": 0, "tree_lanes_total": 0,
                          "pipeline_ahead": 0, "pipeline_stalls": 0,
                          "pipeline_iterations": 0}
 
@@ -370,11 +401,16 @@ class BatchedSpeculativeEngine:
 
     # ------------------------------------------------------------ requests ---
 
-    def submit(self, prompt: list[int], max_new: int = 64, seed: int | None = None) -> int:
+    def submit(self, prompt: list[int], max_new: int = 64, seed: int | None = None,
+               action_hint=None) -> int:
         """Queue a request; it is admitted when a pool slot frees up.
         ``seed`` drives this stream's drafting/verification randomness — a
         single-stream ``SpeculativeEngine`` with ``EngineConfig(seed=seed)``
-        emits the identical token sequence."""
+        emits the identical token sequence.  ``action_hint`` — the expected
+        (K, L1, L2) selector action — is a scheduler-only hint: the sharded
+        engine bin-packs on it; a single engine has one pool, so it accepts
+        and ignores it (API parity lets callers hint unconditionally)."""
+        del action_hint
         if not 1 <= len(prompt) < self.ecfg.max_cache:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens cannot fit a {self.ecfg.max_cache}-slot cache ring"
@@ -780,8 +816,73 @@ class BatchedSpeculativeEngine:
         logits, cache, hidden = fn(self.tp, self.tpool.cache, jnp.asarray(ttoks),
                                    jnp.asarray(parents), jnp.asarray(keep))
         self.tpool.cache = cache
+        real = sum(trees[s].n_nodes for s in active)
         self.counters["target_calls"] += 1
-        self.counters["target_tokens"] += sum(trees[s].n_nodes for s in active)
+        self.counters["target_tokens"] += real
+        self.counters["tree_lanes_total"] += self.n_slots * Tpad
+        self.counters["pad_nodes_total"] += self.n_slots * Tpad - real
+        p_dev = self._warp(logits)
+        for arr in (p_dev, hidden):
+            start_copy = getattr(arr, "copy_to_host_async", None)
+            if start_copy is not None:
+                start_copy()
+        return p_dev, hidden
+
+    def _ragged_layout(self, active, trees):
+        """Per-stream (offset, n_nodes) segments in the flat node buffer,
+        and its bucketed total Npad.  Offsets advance by the aligned segment
+        size (pallas: 8, so Q tiles stay owner-uniform); Npad buckets to the
+        next power of two so the jit cache stays bounded exactly like the
+        padded path's Tpad buckets."""
+        align = self._ragged_align
+        offs, off = {}, 0
+        for s in active:
+            n = trees[s].n_nodes
+            offs[s] = (off, n)
+            off += -(-n // align) * align
+        return offs, _next_pow2(max(off, align))
+
+    def _target_tree_dispatch_ragged(self, active, trees, roffs):
+        """Ragged counterpart of ``_target_tree_dispatch``: ONE flat
+        node-major tree pass over every active stream's tree, no per-row
+        padding to the pool-wide Tpad (serve_step.make_pool_ragged_tree_step;
+        docs/serving.md "Ragged node-major tree batching").  The host ships
+        (Npad,) token/owner/parent/depth/local arrays plus (B,) counts —
+        the same small-index-arrays contract as the padded dispatch, with
+        identical async-host-copy futures returned."""
+        offs, Npad = roffs
+        toks = self._stage("rtree_toks", (Npad,), np.int32)
+        owner = self._stage("rtree_owner", (Npad,), np.int32)
+        parent = self._stage("rtree_parent", (Npad,), np.int32, fill=-1)
+        depth = self._stage("rtree_depth", (Npad,), np.int32)
+        local = self._stage("rtree_local", (Npad,), np.int32, fill=-1)
+        counts = self._stage("rtree_counts", (self.n_slots,), np.int32)
+        align = self._ragged_align
+        for s in active:
+            o, n = offs[s]
+            tree = trees[s]
+            toks[o:o + n] = tree.tokens
+            toks[o] = self.streams[s]["pending"]
+            parent[o:o + n] = np.where(tree.parent >= 0, o + tree.parent, -1)
+            depth[o:o + n] = tree.depth
+            local[o:o + n] = np.arange(n)
+            # owner covers the FULL aligned segment: alignment-gap lanes keep
+            # local = -1 (they write nothing, attend to nothing) but carry
+            # the segment's owner so pallas Q tiles stay owner-uniform
+            owner[o:o + (-(-n // align) * align)] = s
+            counts[s] = n
+        fn = self._jit(f"tgt_rtree_n{Npad}", make_pool_ragged_tree_step(self.tc),
+                       donate_argnums=1)
+        logits, cache, hidden = fn(self.tp, self.tpool.cache, jnp.asarray(toks),
+                                   jnp.asarray(owner), jnp.asarray(parent),
+                                   jnp.asarray(depth), jnp.asarray(local),
+                                   jnp.asarray(counts))
+        self.tpool.cache = cache
+        real = sum(trees[s].n_nodes for s in active)
+        self.counters["target_calls"] += 1
+        self.counters["target_tokens"] += real
+        self.counters["tree_lanes_total"] += Npad
+        self.counters["pad_nodes_total"] += Npad - real
         p_dev = self._warp(logits)
         for arr in (p_dev, hidden):
             start_copy = getattr(arr, "copy_to_host_async", None)
@@ -1012,10 +1113,22 @@ class BatchedSpeculativeEngine:
         q0, hq = self._ingest_deltas(active)
         trees = self._draft_trees(active, acts, q0, pads)
         if self.strategy == "tree":
-            p_dev, hid_dev = self._target_tree_dispatch(active, trees, Tpad)
+            roffs = None
+            if self._ragged_ok:
+                offs, Npad = self._ragged_layout(active, trees)
+                # auto mode goes ragged only on a STRICT lane win (drain
+                # tails, heterogeneous actions); a full homogeneous pool
+                # where Npad == n_slots * Tpad keeps the padded layout
+                if self.ragged == "always" or Npad < self.n_slots * Tpad:
+                    roffs = (offs, Npad)
+            if roffs is not None:
+                p_dev, hid_dev = self._target_tree_dispatch_ragged(
+                    active, trees, roffs)
+            else:
+                p_dev, hid_dev = self._target_tree_dispatch(active, trees, Tpad)
             return PendingStep(active=active, acts=acts, pads=pads, trees=trees,
                                hq=hq, C0=C0, p_dev=p_dev, hid_dev=hid_dev,
-                               rng_state=rng_state, D0=D0,
+                               rng_state=rng_state, D0=D0, roffs=roffs,
                                boundary_evicted=boundary_evicted)
         snapshot, p_host = self._target_replay(active, trees, acts, Kp)
         return PendingStep(active=active, acts=acts, pads=pads, trees=trees,
@@ -1039,7 +1152,11 @@ class BatchedSpeculativeEngine:
             node_paths = {}
             for s in active:
                 tree = trees[s]
-                tree.p = to_verifier_dtype(p_all[s, : tree.n_nodes])
+                if pending.roffs is not None:
+                    o, n = pending.roffs[0][s]
+                    tree.p = to_verifier_dtype(p_all[o:o + n])
+                else:
+                    tree.p = to_verifier_dtype(p_all[s, : tree.n_nodes])
                 acc, c = verify_tree(tree, self.ecfg.verifier, self.streams[s]["rng"])
                 accepted[s], corr[s] = acc, int(c)
                 node_paths[s] = SpeculativeEngine._accepted_nodes(tree, acc)
@@ -1078,7 +1195,11 @@ class BatchedSpeculativeEngine:
                 if s not in self.streams:
                     continue
                 path = v.node_paths[s]
-                self.streams[s]["h_prev_p"] = hid_all[s, path[-1] if path else 0]
+                idx = path[-1] if path else 0
+                if pending.roffs is not None:
+                    self.streams[s]["h_prev_p"] = hid_all[pending.roffs[0][s][0] + idx]
+                else:
+                    self.streams[s]["h_prev_p"] = hid_all[s, idx]
         else:
             for s in pending.active:
                 if s in self.streams:
@@ -1319,9 +1440,14 @@ class ShardedBatchedSpeculativeEngine:
     they serialize but stay token-identical (the host-local smoke path).
 
     The only cross-shard state is the scheduler: ``submit()`` routes each
-    request to the least-loaded shard that can admit it now
-    (``can_admit`` — free row, empty FIFO, free blocks), falling back to
-    least-loaded overall, deterministically in arrival order.  Requests
+    request to a shard that can admit it now (``can_admit`` — free row,
+    empty FIFO, free blocks), bin-packing on the request's expected
+    selector action first (``_pack_cost``: streams with similar (K, L1, L2)
+    buckets land co-resident so shard-local Tpad buckets stay tight —
+    docs/serving.md "Selector-aware bin-packing"), breaking cost ties
+    least-loaded, falling back to least-loaded overall, deterministically
+    in arrival order.  With homogeneous hints every pack cost is 0 and
+    routing degrades exactly to the original least-loaded rule.  Requests
     never migrate; retirement, eviction and block recycling read and write
     nothing outside their shard — which is exactly what lets each shard
     live on its own host with no coherence traffic beyond routing.
@@ -1349,7 +1475,7 @@ class ShardedBatchedSpeculativeEngine:
                  selector=None, n_slots: int = 4, data_shards: int = 2,
                  paged: bool = True, block_size: int = 64,
                  pool_blocks: int | None = None, pipeline: bool = False,
-                 meshes=None):
+                 meshes=None, ragged=True):
         assert data_shards >= 1, data_shards
         self.data_shards = data_shards
         self.n_slots = pad_slots(n_slots, data_shards)
@@ -1365,7 +1491,7 @@ class ShardedBatchedSpeculativeEngine:
                 target_cfg, target_params, draft_cfg, draft_params, ecfg,
                 sampling, selector=selector, n_slots=per_slots, paged=paged,
                 block_size=block_size, pool_blocks=per_blocks,
-                pipeline=pipeline, mesh=meshes[i], shard_id=i)
+                pipeline=pipeline, mesh=meshes[i], shard_id=i, ragged=ragged)
             for i in range(data_shards)
         ]
         s0 = self.shards[0]
@@ -1378,6 +1504,11 @@ class ShardedBatchedSpeculativeEngine:
         self._next_rid = 0
         self._local: dict[int, tuple[int, int]] = {}   # global rid -> (shard, local rid)
         self._global: dict[tuple[int, int], int] = {}  # (shard, local rid) -> global rid
+        # bin-packing state: global rid -> (shard, expected speculation
+        # bucket Tpad) for every live routed request, pruned lazily against
+        # _local at submit().  Scheduler-only — shapes no shard-local
+        # decision and never migrates a stream (see _route)
+        self._resident: dict[int, tuple[int, int]] = {}
         # grouped cross-shard commit (see _commit_shards): legal only when
         # every shard's pool lives on the same device set, which is exactly
         # the host-local smoke topology shard_meshes produces by cycling a
@@ -1392,28 +1523,68 @@ class ShardedBatchedSpeculativeEngine:
 
     # --------------------------------------------------------- scheduling ---
 
-    def _route(self, prompt_len: int) -> int:
-        """Least-loaded shard that can admit now; least-loaded overall when
-        none can (the request queues there).  Load = resident + queued, ties
-        to the lowest shard id — a pure function of arrival order, so the
-        schedule (and therefore any eviction truncation) is deterministic."""
+    @staticmethod
+    def _action_tpad(action) -> int:
+        """Speculation bucket (Tpad) a lone stream with this (K, L1, L2)
+        action would occupy — the bin-packing coordinate.  Uses the engines'
+        own shape-bucketing rule so 'similar action' means exactly 'same
+        compiled tree-pass bucket'."""
+        return BatchedSpeculativeEngine._bucket_actions({0: tuple(action)})[3]
+
+    def _pack_cost(self, si: int, tpad: int) -> int:
+        """Padding lanes (per iteration) that co-residency with shard
+        ``si``'s routed streams would add: a shard steps at the max of its
+        residents' buckets, so joining costs this stream (new_max - tpad)
+        lanes and costs each resident any growth of that max.  0 for an
+        empty shard and whenever every bucket matches — with homogeneous
+        actions all costs are 0 and routing degrades EXACTLY to the
+        original least-loaded rule."""
+        res = [t for s, t in self._resident.values() if s == si]
+        if not res:
+            return 0
+        cur = max(res)
+        new = max(cur, tpad)
+        return (new - tpad) + len(res) * (new - cur)
+
+    def _route(self, prompt_len: int, tpad: int) -> int:
+        """Shard that can admit now with the cheapest bin-packing cost for
+        this request's expected speculation bucket; least-loaded breaks
+        cost ties and least-loaded overall applies when none can admit (the
+        request queues there).  Load = resident + queued, ties to the
+        lowest shard id — a pure function of arrival order and hints, so
+        the schedule (and therefore any eviction truncation) is
+        deterministic and arrival-order-stable.  Routing is the ONLY
+        cross-shard state: placement never migrates a running stream."""
         admitting = [i for i, sh in enumerate(self.shards)
                      if sh.can_admit(prompt_len)]
         pool = admitting or range(self.data_shards)
-        return min(pool, key=lambda i: (len(self.shards[i].streams)
+        return min(pool, key=lambda i: (self._pack_cost(i, tpad),
+                                        len(self.shards[i].streams)
                                         + len(self.shards[i].queue), i))
 
     def shard_of(self, rid: int) -> int:
         """Which shard a live (unfinished) request was routed to."""
         return self._local[rid][0]
 
-    def submit(self, prompt: list[int], max_new: int = 64, seed: int | None = None) -> int:
-        si = self._route(len(prompt))
+    def submit(self, prompt: list[int], max_new: int = 64, seed: int | None = None,
+               action_hint=None) -> int:
+        """Route to a shard (bin-packing on ``action_hint``, the request's
+        expected (K, L1, L2) selector action — default: the engine-config
+        action, under which routing is plain least-loaded) and queue it
+        there.  Hints only steer placement; the resident selector still
+        decides every stream's real per-iteration action."""
+        self._resident = {r: v for r, v in self._resident.items()
+                          if r in self._local}
+        hint = tuple(action_hint) if action_hint is not None else (
+            self.ecfg.K, self.ecfg.L1, self.ecfg.L2)
+        tpad = self._action_tpad(hint)
+        si = self._route(len(prompt), tpad)
         lrid = self.shards[si].submit(prompt, max_new=max_new, seed=seed)
         rid = self._next_rid
         self._next_rid += 1
         self._local[rid] = (si, lrid)
         self._global[(si, lrid)] = rid
+        self._resident[rid] = (si, tpad)
         return rid
 
     def _collect(self, si: int, events: list[dict]) -> list[dict]:

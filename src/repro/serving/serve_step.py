@@ -197,6 +197,33 @@ def make_pool_tree_step(cfg):
     return tree_step
 
 
+def make_pool_ragged_tree_step(cfg):
+    """(params, pool_cache, toks (Npad,), owner, parent, depth, local,
+    counts) -> (logits (Npad, V), cache, hidden (Npad, d)).
+
+    The RAGGED continuous-batching target pass: every active stream's tree
+    flattened into ONE node-major buffer instead of padding each row to the
+    pool-wide Tpad (docs/serving.md "Ragged node-major tree batching").
+    ``owner``/``parent``/``depth``/``local`` are per-node (Npad,) index
+    arrays, ``counts`` the per-row (B,) appended-node counts; padding lanes
+    carry local = -1/parent = -1 and write NOTHING (their ring slot is the
+    out-of-range sentinel, so every drop-mode scatter vanishes) — which is
+    also why no merge_streams is needed: idle rows advance by counts = 0
+    and never see a stale write to undo.  Node j of stream s lands in the
+    exact ring slot padded column j would, so the fused commit
+    (make_pool_commit_step) is shared verbatim between both layouts."""
+
+    def ragged_tree_step(params, cache, toks, owner, parent, depth, local, counts):
+        logits, new_cache, ex = forward(
+            params, cfg, toks[None], mode="tree", cache=cache,
+            ragged={"owner": owner, "parent": parent, "depth": depth,
+                    "local": local, "counts": counts},
+        )
+        return logits[0], new_cache, ex["hidden"][0]
+
+    return ragged_tree_step
+
+
 def make_pool_commit_step(cfg, Tpad: int):
     """Fused post-verification commit: ONE jitted call re-compacts every
     stream's accepted path in the KV ring, invalidates its speculative

@@ -121,3 +121,78 @@ def test_pallas_attention_impl_in_model():
     _, c2, _ = forward(params, cfg_p, toks, mode="full", cache=c2)
     d2, _, _ = forward(params, cfg_p, toks[:, :1], mode="decode", cache=c2)
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-4)
+
+
+def _mk_ragged(seed, segs, H=4, Hkv=2, D=128, nb=4, block=16, tail=0):
+    """A ragged node-major attention problem: ``segs`` 8-row Q tiles per
+    stream (``tail`` trims rows off the last stream's final tile, exercising
+    the wrapper's pad-and-slice), a paged arena with per-stream block
+    tables (-1 = unmapped; unmapped logical slots masked False)."""
+    import numpy as np
+    from repro.kernels.ops import gqa_ragged_tree_attention  # noqa: F401
+
+    B = len(segs)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    N = 8 * sum(segs) - tail
+    owner = np.repeat(np.arange(B, dtype=np.int32), [8 * s for s in segs])[:N]
+    NBLK = 1 + B * nb  # block 0 is the trash block unmapped entries clamp to
+    k_arena = jax.random.normal(ks[0], (NBLK, block, Hkv, D), jnp.float32)
+    v_arena = jax.random.normal(ks[1], (NBLK, block, Hkv, D), jnp.float32)
+    rng = np.random.default_rng(seed)
+    tbl = np.full((B, nb), -1, np.int32)
+    perm = rng.permutation(np.arange(1, NBLK, dtype=np.int32))
+    taken = 0
+    for b in range(B):
+        nmap = int(rng.integers(1, nb + 1))
+        tbl[b, :nmap] = perm[taken:taken + nmap]
+        taken += nmap
+    q = jax.random.normal(ks[2], (N, H, D), jnp.float32)
+    mask = np.array(jax.random.bernoulli(ks[3], 0.5, (N, nb * block)))
+    mask &= np.repeat(tbl >= 0, block, axis=1)[owner]  # unmapped slots False
+    mask[:, 0] = True  # slot 0 is always mapped (tbl[:, 0] >= 0 above)
+    return (q, k_arena, v_arena, jnp.asarray(tbl), jnp.asarray(owner),
+            jnp.asarray(mask))
+
+
+def test_ragged_tree_attention_matches_oracle():
+    """The scalar-prefetched owner steering reads each tile's OWN stream's
+    arena blocks: kernel == pure-jnp gather oracle across a 3-stream ragged
+    buffer with distinct per-stream block tables."""
+    from repro.kernels.ops import gqa_ragged_tree_attention
+    from repro.kernels.ref import ragged_tree_attention_ref
+
+    args = _mk_ragged(0, segs=[1, 2, 1])
+    out = gqa_ragged_tree_attention(*args, interpret=True)
+    ref = ragged_tree_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_ragged_tree_attention_partial_tail_tile():
+    """N not a multiple of 8: the wrapper pads with all-False mask rows and
+    slices them back off; the padded tail must not perturb real rows."""
+    from repro.kernels.ops import gqa_ragged_tree_attention
+    from repro.kernels.ref import ragged_tree_attention_ref
+
+    args = _mk_ragged(1, segs=[1, 1, 2], tail=5)
+    assert args[0].shape[0] % 8 != 0
+    out = gqa_ragged_tree_attention(*args, interpret=True)
+    ref = ragged_tree_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 7), st.integers(0, 2**31 - 1))
+def test_ragged_tree_attention_property(n_streams, tail, seed):
+    """Arbitrary stream counts, segment lengths, ragged tails and sparse
+    block tables: kernel == oracle."""
+    from repro.kernels.ops import gqa_ragged_tree_attention
+    from repro.kernels.ref import ragged_tree_attention_ref
+
+    segs = np.random.default_rng(seed).integers(1, 4, size=n_streams).tolist()
+    tail = min(tail, 8 * segs[-1] - 1)
+    args = _mk_ragged(seed, segs=segs, H=2, Hkv=1, nb=3, tail=tail)
+    out = gqa_ragged_tree_attention(*args, interpret=True)
+    ref = ragged_tree_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

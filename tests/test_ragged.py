@@ -1,0 +1,184 @@
+"""Ragged node-major tree dispatch: the exactness + padding-waste contracts.
+
+``ragged="always"`` forces every tree step through the flat node-major
+layout; ``ragged=False`` pins the padded (slots, Tpad) layout.  For
+identical prompts/seeds the two must emit token-identical output — across
+registry verifiers, sync and pipelined stepping, sharded and unsharded
+pools, XLA and Pallas attention, heterogeneous selector actions — and the
+``pad_nodes_total`` / ``tree_lanes_total`` counters must show the flat
+layout shipping fewer lanes on heterogeneous mixes (docs/serving.md
+"Ragged node-major tree batching").
+
+Cross-engine selectors here key on stream CONTENT (the first committed
+token), never on ``stream["rid"]``: rids are shard-local, so an rid-keyed
+selector legitimately diverges between sharded and unsharded engines.
+"""
+import jax
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+from repro.serving.batch_engine import (
+    BatchedSpeculativeEngine,
+    ShardedBatchedSpeculativeEngine,
+)
+from repro.serving.engine import EngineConfig, SpeculativeEngine
+
+V = 32
+
+DENSE_T = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=96, vocab=V, dtype="float32")
+DENSE_D = ModelConfig(name="d", arch_type="dense", n_layers=1, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=96, vocab=V, dtype="float32")
+MOE_T = ModelConfig(name="m", arch_type="moe", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_ff=96, vocab=V, n_experts=4, top_k=2,
+                    dtype="float32")
+
+# prompt[0] is the selector's content key: stream 0 runs an aggressive
+# action, everyone else a thin one — the adversarial padded-layout mix
+PROMPTS = [[1, 2, 3], [0, 5], [0, 7, 8, 9], [0, 1]]
+SEEDS = [20, 21, 22, 23]
+
+
+def hetero_selector(stream, engine):
+    return (2, 2, 2) if stream["committed"][0] == 1 else (1, 1, 0)
+
+
+@pytest.fixture(scope="module")
+def dense_models():
+    return (DENSE_T, init_params(DENSE_T, jax.random.PRNGKey(0)),
+            DENSE_D, init_params(DENSE_D, jax.random.PRNGKey(1)))
+
+
+def _run(eng, prompts=PROMPTS, seeds=SEEDS, max_new=10):
+    rids = [eng.submit(list(p), max_new=max_new, seed=sd)
+            for p, sd in zip(prompts, seeds)]
+    outs = eng.run()
+    return [outs[r]["tokens"] for r in rids]
+
+
+def _pair(tc, tp, dc, dp, ecfg, **kw):
+    """A padded engine and a forced-ragged engine over the same pool shape."""
+    pad = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                   ragged=False, **kw)
+    rag = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                   ragged="always", **kw)
+    return pad, rag
+
+
+@pytest.mark.parametrize("verifier", ["specinfer", "traversal", "univer", "greedy_mpbv"])
+def test_ragged_matches_padded_across_verifiers(dense_models, verifier):
+    """The core identity, on the adversarial heterogeneous-action mix."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier=verifier, K=2, L1=1, L2=1, max_cache=128)
+    pad, rag = _pair(tc, tp, dc, dp, ecfg, selector=hetero_selector)
+    assert _run(rag) == _run(pad)
+    # the flat buffer shipped strictly fewer lanes than the padded block
+    assert rag.counters["tree_lanes_total"] < pad.counters["tree_lanes_total"]
+
+
+def test_ragged_matches_independent_single_engines(dense_models):
+    """Anchor: ragged == padded == N independent single-stream engines,
+    so the identity chain bottoms out at the reference serving path."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    singles = []
+    for p, sd in zip(PROMPTS, SEEDS):
+        eng = SpeculativeEngine(
+            tc, tp, dc, dp,
+            EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128,
+                         seed=sd))
+        singles.append(eng.generate(list(p), max_new=10))
+    rag = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4, ragged="always")
+    assert _run(rag) == singles
+
+
+@pytest.mark.parametrize("pipeline", [False, True], ids=["sync", "pipelined"])
+def test_ragged_matches_padded_sharded(dense_models, pipeline):
+    """Sharded x {sync, pipelined}: every shard dispatches its own ragged
+    buffer, and the whole ensemble still matches the unsharded padded run."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    pad = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                   selector=hetero_selector, ragged=False)
+    want = _run(pad)
+    rag = ShardedBatchedSpeculativeEngine(
+        tc, tp, dc, dp, ecfg, n_slots=4, data_shards=2,
+        selector=hetero_selector, ragged="always", pipeline=pipeline)
+    assert _run(rag) == want
+
+
+@pytest.mark.slow
+def test_ragged_pipelined_unsharded(dense_models):
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="traversal", K=2, L1=1, L2=1, max_cache=128)
+    pad, rag = _pair(tc, tp, dc, dp, ecfg, pipeline=True)
+    assert _run(rag, max_new=12) == _run(pad, max_new=12)
+
+
+@pytest.mark.slow
+def test_ragged_matches_padded_moe(dense_models):
+    """The ragged owner indirection threads through the MoE macro-body."""
+    _, _, dc, dp = dense_models
+    tp = init_params(MOE_T, jax.random.PRNGKey(2))
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    pad, rag = _pair(MOE_T, tp, dc, dp, ecfg, selector=hetero_selector)
+    assert _run(rag) == _run(pad)
+
+
+@pytest.mark.slow
+def test_ragged_pallas_paged_end_to_end(dense_models):
+    """attention_impl='pallas' + paged pool: the ragged block-table kernel
+    (scalar-prefetched owner steering) carries the whole serving loop."""
+    _, _, dc, dp = dense_models
+    cfg = DENSE_T.replace(name="tp", n_heads=2, n_kv_heads=1, head_dim=128)
+    tp = init_params(cfg, jax.random.PRNGKey(3))
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    pad, rag = _pair(cfg, tp, dc, dp, ecfg)
+    assert rag._ragged_ok, "pallas + paged pool must keep the ragged path on"
+    pcfg = cfg.replace(attention_impl="pallas")
+    ppad = BatchedSpeculativeEngine(pcfg, init_params(cfg, jax.random.PRNGKey(3)),
+                                    dc, dp, ecfg, n_slots=4, ragged=False)
+    prag = BatchedSpeculativeEngine(pcfg, init_params(cfg, jax.random.PRNGKey(3)),
+                                    dc, dp, ecfg, n_slots=4, ragged="always")
+    want = _run(ppad, max_new=6)
+    assert _run(prag, max_new=6) == want
+    # and the XLA engines agree with the pallas ones (impl-independence)
+    assert _run(pad, max_new=6) == want
+
+
+def test_ragged_pallas_ring_falls_back_padded(dense_models):
+    """pallas + a non-paged ring pool has no block table to steer the ragged
+    kernel: the engine must silently pin the padded layout, not crash."""
+    _, _, dc, dp = dense_models
+    cfg = DENSE_T.replace(name="tr", n_heads=2, n_kv_heads=1, head_dim=128,
+                          attention_impl="pallas")
+    tp = init_params(cfg, jax.random.PRNGKey(3))
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    rag = BatchedSpeculativeEngine(cfg, tp, dc, dp, ecfg, n_slots=4,
+                                   paged=False, ragged="always")
+    assert not rag._ragged_ok
+    pad = BatchedSpeculativeEngine(cfg, tp, dc, dp, ecfg, n_slots=4,
+                                   paged=False, ragged=False)
+    assert _run(rag, max_new=6) == _run(pad, max_new=6)
+
+
+def test_auto_ragged_heuristic_and_pad_counters(dense_models):
+    """ragged=True (auto) goes ragged exactly when the flat buffer beats the
+    padded lane count: heterogeneous mixes and drain tails qualify, and the
+    pad counters record the win; outputs still match the padded engine."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    pad = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                   selector=hetero_selector, ragged=False)
+    auto = BatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                    selector=hetero_selector, ragged=True)
+    assert _run(auto) == _run(pad)
+    cp, ca = pad.counters, auto.counters
+    assert cp["tree_lanes_total"] > 0 and ca["tree_lanes_total"] > 0
+    frac_pad = cp["pad_nodes_total"] / cp["tree_lanes_total"]
+    frac_auto = ca["pad_nodes_total"] / ca["tree_lanes_total"]
+    assert ca["tree_lanes_total"] < cp["tree_lanes_total"]
+    assert frac_auto < frac_pad
+    # both counters saw the same real work
+    assert ca["target_tokens"] == cp["target_tokens"]

@@ -346,3 +346,69 @@ def test_collective_bytes_parser():
     assert out["all-reduce"] == 128 * 4
     assert out["all-to-all"] == 64 * 32 * 2
     assert out["reduce-scatter"] == 0
+
+
+def test_bin_packing_groups_similar_actions(dense_models):
+    """Selector-aware routing: alternating big/thin action hints land
+    big-with-big and thin-with-thin, so each shard's pool-wide speculation
+    bucket stays tight instead of every shard stepping at the big Tpad."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    eng = ShardedBatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                          data_shards=2)
+    big, thin = (4, 2, 4), (1, 1, 0)
+    hints = [big, thin, big, thin]
+    rids = [eng.submit(list(p), max_new=4, seed=sd, action_hint=h)
+            for p, sd, h in zip(PROMPTS, SEEDS, hints)]
+    shards = [eng.shard_of(r) for r in rids]
+    assert shards[0] == shards[2], "both big-bucket streams must co-reside"
+    assert shards[1] == shards[3], "both thin-bucket streams must co-reside"
+    assert shards[0] != shards[1], "big and thin buckets must not mix"
+    outs = eng.run()
+    assert all(len(outs[r]["tokens"]) == 4 for r in rids)
+
+
+def test_bin_packing_deterministic_and_output_invariant(dense_models):
+    """The schedule is a pure function of arrival order and hints: two
+    identical engines place identically and emit identical tokens — and the
+    hints steer PLACEMENT only, so a hint-free engine serving the same
+    arrivals emits the same per-request tokens from (possibly) different
+    shards."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    hints = [(4, 2, 4), (1, 1, 0), (1, 1, 0), (4, 2, 4)]
+
+    def serve(with_hints):
+        eng = ShardedBatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                              data_shards=2)
+        rids = [eng.submit(list(p), max_new=8, seed=sd,
+                           action_hint=(h if with_hints else None))
+                for p, sd, h in zip(PROMPTS, SEEDS, hints)]
+        placed = [eng.shard_of(r) for r in rids]
+        outs = eng.run()
+        return placed, [outs[r]["tokens"] for r in rids]
+
+    placed_a, outs_a = serve(True)
+    placed_b, outs_b = serve(True)
+    assert placed_a == placed_b, "same arrivals + hints must place identically"
+    assert outs_a == outs_b
+    # heterogeneous hints produced a non-least-loaded grouping…
+    assert placed_a == [0, 1, 1, 0]
+    placed_free, outs_free = serve(False)
+    # …while hint-free routing stays the original least-loaded round-robin
+    assert placed_free == [0, 1, 0, 1]
+    assert outs_free == outs_a, "hints must never change emitted tokens"
+
+
+def test_bin_packing_homogeneous_hints_degrade_to_least_loaded(dense_models):
+    """With every hint in the same bucket all pack costs are 0 and routing
+    is EXACTLY the original least-loaded rule (the pinned placements above
+    this suite rely on that degradation)."""
+    tc, tp, dc, dp = dense_models
+    ecfg = EngineConfig(verifier="specinfer", K=2, L1=1, L2=1, max_cache=128)
+    eng = ShardedBatchedSpeculativeEngine(tc, tp, dc, dp, ecfg, n_slots=4,
+                                          data_shards=2)
+    rids = [eng.submit(list(p), max_new=4, seed=sd, action_hint=(2, 1, 1))
+            for p, sd in zip(PROMPTS, SEEDS)]
+    assert [eng.shard_of(r) for r in rids] == [0, 1, 0, 1]
+    eng.run()
